@@ -1,0 +1,75 @@
+"""Pallas kernel micro-bench: interpret-mode correctness latency vs the
+jnp reference (CPU container; TPU wall-clock is out of scope -- the
+roofline table carries the performance story)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, *args, reps=3) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    us, got = _t(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    err = float(jnp.max(jnp.abs(got - ref.attention_ref(q, k, v))))
+    rows.append(("kernels/flash_attention/interpret", us, err))
+    us_ref, _ = _t(ref.attention_ref, q, k, v)
+    rows.append(("kernels/flash_attention/jnp_ref", us_ref, 0.0))
+
+    # block-sparse matmul
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    mask = rng.random((4, 4)) < 0.4
+    a = a * np.kron(mask, np.ones((64, 64), np.float32))
+    b = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    tiles, rws, cls = ops.compact_tiles(a, 64, 64)
+    us, got = _t(lambda t_, r_, c_, b_: ops.block_sparse_matmul(
+        t_, r_, c_, b_, m=256, bn=64), tiles, rws, cls, b)
+    err = float(jnp.max(jnp.abs(
+        got - ref.block_sparse_matmul_ref(jnp.asarray(a), b))))
+    rows.append(("kernels/block_sparse_matmul/interpret", us, err))
+
+    # ssd chunk
+    x = jnp.asarray(rng.standard_normal((1, 2, 128, 4, 64)), jnp.float32)
+    aa = -jnp.abs(jnp.asarray(rng.standard_normal((1, 4, 2, 128)),
+                              jnp.float32)) * 0.1
+    bb = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    us, got = _t(ops.ssd_chunk, x, aa, bb, cc)
+    err = float(jnp.max(jnp.abs(got - ref.ssd_chunk_ref(x, aa, bb, cc))))
+    rows.append(("kernels/ssd_chunk/interpret", us, err))
+
+    # sorted-coordinate intersection (ExTensor skip-ahead -> TPU)
+    ac = ops.pad_sorted(np.sort(rng.choice(100000, 2000,
+                                           replace=False)).astype(
+                            np.int32), 512)
+    bc = ops.pad_sorted(np.sort(rng.choice(100000, 4000,
+                                           replace=False)).astype(
+                            np.int32), 512)
+    us, got = _t(lambda a_, b_: ops.intersect_sorted(a_, b_, block=512),
+                 jnp.asarray(ac), jnp.asarray(bc))
+    err = float(jnp.max(jnp.abs(
+        got - ref.intersect_sorted_ref(ac, bc))))
+    rows.append(("kernels/intersect_sorted/interpret", us, err))
+    return rows

@@ -1,0 +1,28 @@
+"""LM-fleet roofline rows for the benchmark CSV (reads the dry-run
+artifacts; full table in EXPERIMENTS.md via repro.launch.roofline)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.launch.roofline import full_table
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        cells = full_table(mesh)
+        n_ok = sum(c.status == "ok" for c in cells)
+        n_skip = sum(c.status == "skipped" for c in cells)
+        n_err = sum(c.status == "error" for c in cells)
+        rows.append((f"roofline/{mesh}/cells_ok", 0.0, float(n_ok)))
+        rows.append((f"roofline/{mesh}/cells_skipped", 0.0,
+                     float(n_skip)))
+        rows.append((f"roofline/{mesh}/cells_error", 0.0, float(n_err)))
+        for c in cells:
+            if c.status != "ok":
+                continue
+            rows.append((
+                f"roofline/{mesh}/{c.arch}/{c.shape}/"
+                f"{c.dominant}-bound", c.step_seconds * 1e6,
+                round(c.roofline_fraction, 4)))
+    return rows

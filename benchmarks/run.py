@@ -1,0 +1,58 @@
+"""Benchmark harness -- one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13]
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the host
+wall time of the modeled run where meaningful; ``derived`` is the
+figure's metric: normalized traffic, modeled seconds, speedup, error %,
+or a 1.0/0.0 claim check).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "table1": "benchmarks.table1_designs",
+    "fig9": "benchmarks.fig9_memory_traffic",
+    "fig10": "benchmarks.fig10_performance",
+    "fig11": "benchmarks.fig11_energy",
+    "fig13": "benchmarks.fig13_vcp",
+    "table2": "benchmarks.table2_zoo",
+    "kernels": "benchmarks.kernels_bench",
+    "roofline": "benchmarks.roofline_lm",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of: "
+                    + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name = BENCHES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run()
+            for rname, us, derived in rows:
+                print(f"{rname},{us:.1f},{derived}")
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,0.0")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""The paper's accelerator designs as TeAAL specifications.
+
+Each module exposes ``spec(**params) -> AcceleratorSpec`` mirroring the
+published design (Figures 3, 8, 12; hardware parameters from Table 5),
+plus the Table 2 cascade zoo in ``zoo``.
+"""
+from . import (extensor, gamma, graphicionado, matraptor, outerspace,
+               sigma, zoo)
+
+REGISTRY = {
+    "outerspace": outerspace.spec,
+    "extensor": extensor.spec,
+    "gamma": gamma.spec,
+    "sigma": sigma.spec,
+    "matraptor": matraptor.spec,
+    "graphicionado": graphicionado.graphicionado_spec,
+    "graphdyns": graphicionado.graphdyns_spec,
+    "ours-vcp": graphicionado.improved_spec,
+}
+
+__all__ = ["REGISTRY", "extensor", "gamma", "graphicionado", "matraptor",
+           "outerspace", "sigma", "zoo"]

@@ -1,0 +1,131 @@
+"""The Table 2 cascade zoo: Einsum cascades for accelerators/algorithms
+beyond the four validated designs.  Each entry is a minimal spec
+(einsum + default mapping) used to demonstrate the expressive range of
+cascades-of-Einsums and to drive the benchmark that checks every
+cascade evaluates correctly against the dense oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core.spec import AcceleratorSpec, load_spec
+
+
+def eyeriss_conv() -> AcceleratorSpec:
+    """Eyeriss CONV (Table 2): O[b,m,p,q] = I[b,c,p+r,q+s] * F[c,m,r,s]."""
+    return load_spec({
+        "name": "Eyeriss-CONV",
+        "einsum": {
+            "declaration": {
+                "I": ["B", "C", "H", "W"],
+                "F": ["C", "M", "R", "S"],
+                "O": ["B", "M", "P", "Q"],
+            },
+            "expressions": [
+                "O[b, m, p, q] = I[b, c, p + r, q + s] * F[c, m, r, s]",
+            ],
+        },
+        "mapping": {},
+    })
+
+
+def toeplitz_conv() -> AcceleratorSpec:
+    """Toeplitz expansion / im2col + matmul (Table 2), 2D."""
+    return load_spec({
+        "name": "Toeplitz-CONV",
+        "einsum": {
+            "declaration": {
+                "I": ["B", "C", "H", "W"],
+                "F": ["C", "M", "R", "S"],
+                "T": ["B", "C", "P", "Q", "R", "S"],
+                "O": ["B", "M", "P", "Q"],
+            },
+            "expressions": [
+                "T[b, c, p, q, r, s] = I[b, c, p + r, q + s]",
+                "O[b, m, p, q] = T[b, c, p, q, r, s] * F[c, m, r, s]",
+            ],
+        },
+        "mapping": {},
+    })
+
+
+def tensaurus_mttkrp() -> AcceleratorSpec:
+    """Tensaurus MTTKRP (Table 2): C[i,r] = T[i,j,k] * B[j,r] * A[k,r]."""
+    return load_spec({
+        "name": "Tensaurus-MTTKRP",
+        "einsum": {
+            "declaration": {
+                "T": ["I", "J", "K"],
+                "A": ["K", "R"],
+                "B": ["J", "R"],
+                "C": ["I", "R"],
+            },
+            "expressions": ["C[i, r] = T[i, j, k] * B[j, r] * A[k, r]"],
+        },
+        "mapping": {
+            "loop-order": {"C": ["I", "J", "K", "R"]},
+        },
+    })
+
+
+def factorized_mttkrp() -> AcceleratorSpec:
+    """Factorized MTTKRP (Table 2): two-stage cascade."""
+    return load_spec({
+        "name": "Factorized-MTTKRP",
+        "einsum": {
+            "declaration": {
+                "T": ["I", "J", "K"],
+                "A": ["K", "R"],
+                "B": ["J", "R"],
+                "S": ["I", "J", "R"],
+                "C": ["I", "R"],
+            },
+            "expressions": [
+                "S[i, j, r] = T[i, j, k] * A[k, r]",
+                "C[i, r] = S[i, j, r] * B[j, r]",
+            ],
+        },
+        "mapping": {
+            "loop-order": {"S": ["I", "J", "K", "R"],
+                           "C": ["I", "J", "R"]},
+        },
+    })
+
+
+def cooley_tukey_step() -> AcceleratorSpec:
+    """One Cooley-Tukey FFT butterfly step (Table 2).
+
+    E/O are the even/odd DFT halves; P holds twiddle factors.  Uses real
+    arithmetic (the butterfly structure is what the cascade expresses).
+    """
+    return load_spec({
+        "name": "FFT-Step",
+        "einsum": {
+            "declaration": {
+                "P": ["U", "K0", "N1", "V"],
+                "X": ["N1", "V"],
+                "E": ["U", "K0"],
+                "O": ["U", "K0"],
+                "T": ["K0"],
+                "Y0": ["K0"],
+                "Y1": ["K0"],
+            },
+            "expressions": [
+                "E[0, k0] = P[0, k0, n1, 0] * X[n1, 0]",
+                "O[0, k0] = P[0, k0, n1, 0] * X[n1, 1]",
+                "T[k0] = P[0, k0, 0, 1] * O[0, k0]",
+                "Y0[k0] = E[0, k0] + T[k0]",
+                "Y1[k0] = E[0, k0] - T[k0]",
+            ],
+        },
+        "mapping": {},
+    })
+
+
+ZOO: Dict[str, Any] = {
+    "eyeriss-conv": eyeriss_conv,
+    "toeplitz-conv": toeplitz_conv,
+    "tensaurus-mttkrp": tensaurus_mttkrp,
+    "factorized-mttkrp": factorized_mttkrp,
+    "fft-step": cooley_tukey_step,
+}

@@ -1,0 +1,5 @@
+from repro.checkpoint.store import (CheckpointManager, restore_resharded,
+                                    save_checkpoint, load_checkpoint)
+
+__all__ = ["CheckpointManager", "restore_resharded", "save_checkpoint",
+           "load_checkpoint"]

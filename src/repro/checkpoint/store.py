@@ -1,0 +1,195 @@
+"""Atomic, async-capable checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json       pytree structure + leaf shapes/dtypes + meta
+        leaf_00000.npy ...  one file per leaf (streams well to blob stores)
+    <dir>/step_000123.tmp/  staging dir, atomically renamed on success
+    <dir>/LATEST            text file naming the newest complete step
+
+Fault-tolerance properties:
+  * atomic publish: a crash mid-write leaves only a .tmp dir, never a
+    half-visible checkpoint; LATEST is written after the rename;
+  * async save: ``save_async`` snapshots device arrays to host then
+    writes on a worker thread, so the train loop resumes immediately;
+  * elastic restore: ``restore_resharded`` re-lays-out leaves onto any
+    new mesh/sharding (the checkpoint stores the GLOBAL logical array);
+  * retention: keep the newest ``keep`` checkpoints, delete older.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _flatten_with_paths(tree: Params):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Params,
+                    extra_meta: Optional[Dict[str, Any]] = None) -> Path:
+    """Synchronous atomic save of the GLOBAL pytree."""
+    directory = Path(directory)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f"step_{step:09d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, paths, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "paths": paths,
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+        "treedef": str(treedef),
+        "meta": extra_meta or {},
+        "time": time.time(),
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            # numpy cannot round-trip ml_dtypes (bf16); widen to f32
+            # (exact) and restore from the manifest dtype on load
+            arr = arr.astype(np.float32)
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic publish
+    (directory / "LATEST").write_text(final.name)
+    return final
+
+
+def load_checkpoint(directory: str | Path, step: Optional[int] = None,
+                    like: Optional[Params] = None) -> Tuple[Params, int]:
+    """Load a checkpoint as host numpy arrays, re-built into the
+    structure of ``like`` (required -- treedefs are not serialized
+    executably, by design)."""
+    directory = Path(directory)
+    if step is None:
+        latest = (directory / "LATEST").read_text().strip()
+        path = directory / latest
+    else:
+        path = directory / f"step_{step:09d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves = []
+    for i in range(manifest["n_leaves"]):
+        arr = np.load(path / f"leaf_{i:05d}.npy")
+        want = manifest["dtypes"][i]
+        if "bfloat16" in want and arr.dtype != want:
+            import ml_dtypes
+            arr = arr.astype(ml_dtypes.bfloat16)
+        leaves.append(arr)
+    assert like is not None, "pass `like=` target pytree"
+    treedef = jax.tree_util.tree_structure(like)
+    assert treedef.num_leaves == len(leaves), \
+        f"checkpoint has {len(leaves)} leaves, target {treedef.num_leaves}"
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+def restore_resharded(directory: str | Path, like: Params,
+                      shardings: Optional[Params] = None,
+                      step: Optional[int] = None) -> Tuple[Params, int]:
+    """Elastic restore: place each global leaf onto a (possibly
+    different) mesh/sharding -- node counts may change between runs."""
+    host_tree, got_step = load_checkpoint(directory, step, like=like)
+    if shardings is None:
+        dev_tree = jax.tree_util.tree_map(jnp.asarray, host_tree)
+    else:
+        dev_tree = jax.tree_util.tree_map(
+            lambda arr, sh: jax.device_put(jnp.asarray(arr), sh),
+            host_tree, shardings)
+    # restore original dtypes (np.save keeps them, but cast defensively)
+    dev_tree = jax.tree_util.tree_map(
+        lambda new, old: new.astype(old.dtype)
+        if hasattr(old, "dtype") else new, dev_tree, like)
+    return dev_tree, got_step
+
+
+class CheckpointManager:
+    """Async save + retention + resume."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ #
+    def save_async(self, step: int, tree: Params,
+                   extra_meta: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host, then write on a background thread."""
+        self.wait()                              # one in flight at a time
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                extra_meta)
+                self._gc()
+            except BaseException as ex:          # surfaced on next wait()
+                self._error = ex
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: Params,
+             extra_meta: Optional[Dict[str, Any]] = None) -> Path:
+        self.wait()
+        path = save_checkpoint(self.directory, step, tree, extra_meta)
+        self._gc()
+        return path
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> Optional[int]:
+        latest = self.directory / "LATEST"
+        if not latest.exists():
+            return None
+        name = latest.read_text().strip()
+        if not (self.directory / name / "manifest.json").exists():
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, like: Params, shardings: Optional[Params] = None,
+                step: Optional[int] = None) -> Tuple[Params, int]:
+        return restore_resharded(self.directory, like, shardings, step)
+
+    def steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.directory.glob("step_*")
+                      if p.is_dir() and not p.name.endswith(".tmp")
+                      and (p / "manifest.json").exists())
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:09d}",
+                          ignore_errors=True)

@@ -1,0 +1,21 @@
+"""TeAAL core: the paper's declarative language + simulator generator.
+
+Public API:
+    load_spec          -- YAML-shaped dict -> AcceleratorSpec
+    CascadeSimulator   -- spec + real tensors -> outputs + Report
+    FTensor / Fiber    -- the fibertree abstraction
+    Semiring           -- redefinable (+, *) for graph algorithms
+"""
+from .einsum import Einsum, Semiring, dense_reference, parse_einsum
+from .fibertree import Fiber, FTensor
+from .generator import CascadeSimulator, SimResult, check_against_dense
+from .mapping import MappingResolver
+from .metrics import ENERGY_TABLE_PJ, Report, RooflineTerms, roofline
+from .spec import AcceleratorSpec, load_spec
+
+__all__ = [
+    "Einsum", "Semiring", "dense_reference", "parse_einsum",
+    "Fiber", "FTensor", "CascadeSimulator", "SimResult",
+    "check_against_dense", "MappingResolver", "ENERGY_TABLE_PJ",
+    "Report", "RooflineTerms", "roofline", "AcceleratorSpec", "load_spec",
+]

@@ -1,0 +1,338 @@
+"""The TeAAL simulator generator (Sec. 4.3, Fig. 6).
+
+Combines the einsum + mapping specs into executable mapped loop nests
+(``EinsumExecutor``), runs them on real tensors represented as
+fibertrees, streams the resulting access/compute traces into the
+``PerformanceModel`` (format/architecture/binding-aware component
+models), and finally produces summary statistics (execution time,
+memory traffic, energy) via ``metrics.evaluate``.
+
+Online rank swizzles of intermediate tensors (OuterSPACE's sort,
+Gamma's hardware merge) are detected automatically by comparing each
+intermediate input tensor's stored rank order to the consuming Einsum's
+concordant execution order; the required merge work (elements, sorted
+runs) is emitted to the bound Merger component.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cascade import CascadeDAG
+from .components import PerformanceModel
+from .einsum import Semiring
+from .fibertree import Fiber, FTensor
+from .iteration import EinsumExecutor
+from .mapping import EinsumPlan, MappingResolver
+from .metrics import Report, evaluate
+from .spec import AcceleratorSpec
+from .trace import Instrumentation, NullInstr, TeeInstr
+
+
+# ---------------------------------------------------------------------- #
+# declared-form reconstruction
+# ---------------------------------------------------------------------- #
+def restore_declared(out_exec: FTensor, plan: EinsumPlan,
+                     declared_order: Sequence[str],
+                     rank_shapes: Optional[Dict[str, int]] = None) -> FTensor:
+    """Rebuild the executor's exec-form output (possibly partitioned /
+    flattened / loop-ordered) into its declared storage form with
+    original coordinates."""
+    var_of_rank: Dict[str, Tuple[str, ...]] = {}
+    for r in out_exec.ranks:
+        var_of_rank[r] = plan.var_map.get(r, (r.lower(),))
+
+    declared = list(declared_order)
+    decl_vars = [plan.var_map.get(r, (r.lower(),))[0] for r in declared]
+
+    out = FTensor(out_exec.name, declared,
+                  rank_shapes={r: (rank_shapes or {}).get(r)
+                               for r in declared},
+                  default=out_exec.default)
+    uppers = out_exec.upper_ranks
+    for path, val in out_exec.iter_leaves():
+        bind: Dict[str, Any] = {}
+        for rank, c in zip(out_exec.ranks, path):
+            if rank in uppers:
+                continue
+            vs = var_of_rank[rank]
+            if isinstance(c, tuple):
+                for v, cv in zip(vs, c):
+                    bind[v] = cv
+            else:
+                bind[vs[0]] = c
+        coords = [bind[v] for v in decl_vars]
+        node = out.root
+        for c in coords[:-1]:
+            node = node.get_or_create(c, Fiber)
+        node.insert(coords[-1], val)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# online-swizzle (merge) detection
+# ---------------------------------------------------------------------- #
+def _innermost_var_order(plan: EinsumPlan, tensor: str) -> List[str]:
+    """Per-var traversal order of a tensor in execution form: the order
+    in which each var's *binding* level appears."""
+    tp = plan.tensors[tensor]
+    seen: List[str] = []
+    for r in reversed(tp.exec_order):
+        for v in reversed(plan.var_map.get(r, (r.lower(),))):
+            if v not in seen:
+                seen.append(v)
+    seen.reverse()
+    return seen
+
+
+def merge_events(stored: FTensor, exec_var_order: Sequence[str]
+                 ) -> List[Tuple[int, int]]:
+    """(elements, lists) merge work needed to swizzle ``stored`` (in its
+    declared form) into an order consistent with ``exec_var_order``."""
+    stored_vars = [r.lower() for r in stored.ranks]
+    p = 0
+    while (p < len(stored_vars) and p < len(exec_var_order)
+           and stored_vars[p] == exec_var_order[p]):
+        p += 1
+    if p >= len(stored_vars) - 1:
+        return []                             # concordant (or trivial)
+
+    events: List[Tuple[int, int]] = []
+
+    def n_leaves(node: Any) -> int:
+        if not isinstance(node, Fiber):
+            return 1
+        return sum(n_leaves(c) for _, c in node)
+
+    def walk(fiber: Fiber, depth: int) -> None:
+        if depth == p:
+            elements = n_leaves(fiber)
+            lists = len(fiber)
+            if elements and lists:
+                events.append((elements, lists))
+            return
+        for _, child in fiber:
+            walk(child, depth + 1)
+
+    walk(stored.root, 0)
+    return events
+
+
+# ---------------------------------------------------------------------- #
+# the cascade simulator
+# ---------------------------------------------------------------------- #
+@dataclass
+class SimResult:
+    tensors: Dict[str, FTensor]              # all tensors, declared form
+    report: Optional[Report]                 # None when model disabled
+
+    def __getitem__(self, name: str) -> FTensor:
+        return self.tensors[name]
+
+
+class CascadeSimulator:
+    """spec + real input tensors -> outputs + performance report."""
+
+    def __init__(self, spec: AcceleratorSpec,
+                 params: Optional[Dict[str, int]] = None,
+                 semiring: Optional[Semiring] = None,
+                 extra_instr: Optional[Instrumentation] = None,
+                 model: bool = True):
+        self.spec = spec
+        self.resolver = MappingResolver(spec, params)
+        self.semiring = semiring or spec.einsum.semiring
+        self.dag = CascadeDAG.from_spec(spec)
+        self.plans: Dict[str, EinsumPlan] = {
+            e.output.tensor: self.resolver.plan(e.output.tensor)
+            for e in spec.einsum.expressions
+        }
+        self.model: Optional[PerformanceModel] = (
+            PerformanceModel(spec, self.plans) if model else None)
+        sinks = [s for s in (self.model, extra_instr) if s is not None]
+        self.instr: Instrumentation = (
+            sinks[0] if len(sinks) == 1 else
+            TeeInstr(*sinks) if sinks else NullInstr())
+
+    # ------------------------------------------------------------------ #
+    def _to_ftensor(self, name: str, value: Any) -> FTensor:
+        if isinstance(value, FTensor):
+            return value
+        ranks = (self.spec.mapping.rank_order.get(name)
+                 or self.spec.einsum.declaration[name])
+        arr = np.asarray(value)
+        decl = self.spec.einsum.declaration[name]
+        if list(ranks) != list(decl):
+            # provided dense arrays follow the declaration order
+            ft = FTensor.from_dense(name, decl, arr)
+            return ft.swizzle(ranks)
+        return FTensor.from_dense(name, ranks, arr)
+
+    def _var_shapes(self, store: Dict[str, FTensor],
+                    overrides: Optional[Dict[str, int]]) -> Dict[str, int]:
+        shapes: Dict[str, int] = dict(overrides or {})
+        for ft in store.values():
+            for r in ft.ranks:
+                s = ft.rank_shapes.get(r)
+                if isinstance(s, int):
+                    v = r.lower()
+                    shapes[v] = max(shapes.get(v, 0), s)
+        return shapes
+
+    def _isect_config(self, out_name: str):
+        """Intersection strategy for this Einsum from its bound topology's
+        Intersection component (type, leader attrs)."""
+        topo_name = self.spec.binding.get(out_name).topology
+        topo = self.spec.arch.topologies.get(topo_name)
+        if topo is None and self.spec.arch.topologies:
+            topo = next(iter(self.spec.arch.topologies.values()))
+        if topo is not None:
+            for comp, _ in topo.all_components():
+                if comp.klass == "Intersection":
+                    return (comp.attrs.get("type", "two_finger"),
+                            comp.attrs.get("leader"))
+        return ("two_finger", None)
+
+    # ------------------------------------------------------------------ #
+    def run(self, inputs: Dict[str, Any],
+            var_shapes: Optional[Dict[str, int]] = None) -> SimResult:
+        store: Dict[str, FTensor] = {
+            name: self._to_ftensor(name, v) for name, v in inputs.items()}
+        shapes = self._var_shapes(store, var_shapes)
+
+        for e in self.spec.einsum.expressions:
+            out_name = e.output.tensor
+            plan = self.plans[out_name]
+
+            # bare whole-tensor copy (e.g. "P1 = P0"): a rename, not data
+            # movement -- alias with zero hardware cost.
+            from .einsum import TensorAccess as _TA
+            if (not e.output.indices and isinstance(e.expr, _TA)
+                    and not e.expr.indices):
+                store[out_name] = store[e.expr.tensor].copy(out_name)
+                continue
+
+            missing = [t for t in e.input_names if t not in store]
+            if missing:
+                raise KeyError(f"einsum {out_name}: missing inputs {missing}")
+
+            exec_forms = self.resolver.transform_all(
+                out_name, {t: store[t] for t in e.input_names})
+
+            # online rank swizzles of intermediates -> merger work
+            for t in e.input_names:
+                if self.dag.is_intermediate(t):
+                    order = _innermost_var_order(plan, t)
+                    for elements, lists in merge_events(store[t], order):
+                        self.instr.merge(out_name, t, elements, lists)
+
+            out_initial = None
+            if out_name in store:
+                # update-in-place semantics (e.g. GraphDynS filtered write)
+                out_initial = self.resolver.transform_tensor(
+                    out_name, store[out_name])
+
+            if self.model is not None:
+                self.model.register_exec_tensors(out_name, exec_forms)
+
+            strategy, leader = self._isect_config(out_name)
+            executor = EinsumExecutor(
+                plan, exec_forms, shapes, semiring=self.semiring,
+                instr=self.instr, out_initial=out_initial,
+                isect_strategy=strategy, isect_leader=leader)
+            out_exec = executor.run()
+
+            declared_order = (self.spec.mapping.rank_order.get(out_name)
+                              or self.spec.einsum.declaration[out_name])
+            decl_shapes = {}
+            for r in declared_order:
+                v = r.lower()
+                if v in shapes:
+                    decl_shapes[r] = shapes[v]
+            store[out_name] = restore_declared(out_exec, plan,
+                                               declared_order, decl_shapes)
+            shapes = self._var_shapes(store, var_shapes)
+
+        report = (evaluate(self.spec, self.plans, self.model)
+                  if self.model is not None else None)
+        return SimResult(tensors=store, report=report)
+
+    # ------------------------------------------------------------------ #
+    def run_iterative(self, inputs: Dict[str, Any],
+                      carry: Dict[str, str],
+                      max_iters: int = 64,
+                      done_when_empty: Optional[str] = None,
+                      var_shapes: Optional[Dict[str, int]] = None
+                      ) -> Tuple[SimResult, int]:
+        """Run the cascade repeatedly (vertex-centric iterations).
+
+        ``carry`` maps next-iteration input names to this iteration's
+        tensor names (e.g. {'A0': 'A1', 'P0': 'P1'}); iteration stops
+        when tensor ``done_when_empty`` has no nonzeros or after
+        ``max_iters``."""
+        state = dict(inputs)
+        result: Optional[SimResult] = None
+        iters = 0
+        for it in range(max_iters):
+            result = self.run(state, var_shapes)
+            iters = it + 1
+            if done_when_empty is not None:
+                flag = result.tensors.get(done_when_empty)
+                if flag is None or flag.nnz == 0:
+                    break
+            for dst, src in carry.items():
+                ft = result.tensors[src]
+                dst_ranks = (self.spec.mapping.rank_order.get(dst)
+                             or self.spec.einsum.declaration.get(dst))
+                if dst_ranks and list(ft.ranks) != list(dst_ranks):
+                    # positional rank rename (e.g. A1[D] -> A0[S])
+                    ft = ft.rename_ranks(dict(zip(ft.ranks, dst_ranks)))
+                state[dst] = ft.copy(dst)
+            # non-carried inputs persist
+            for name, v in inputs.items():
+                if name not in carry:
+                    state.setdefault(name, v)
+        assert result is not None
+        return result, iters
+
+
+# ---------------------------------------------------------------------- #
+# convenience: functional check against the dense oracle
+# ---------------------------------------------------------------------- #
+def check_against_dense(spec: AcceleratorSpec, inputs: Dict[str, np.ndarray],
+                        var_shapes: Dict[str, int],
+                        params: Optional[Dict[str, int]] = None,
+                        semiring: Optional[Semiring] = None,
+                        atol: float = 1e-8) -> bool:
+    """Run the fibertree path and the brute-force dense oracle; compare
+    every cascade output."""
+    from .einsum import dense_reference
+
+    sim = CascadeSimulator(spec, params=params, semiring=semiring,
+                           model=False)
+    res = sim.run(dict(inputs), var_shapes)
+
+    dense: Dict[str, np.ndarray] = {k: np.asarray(v)
+                                    for k, v in inputs.items()}
+    sr = semiring or spec.einsum.semiring
+    for e in spec.einsum.expressions:
+        dense[e.output.tensor] = dense_reference(e, dense, {
+            k.upper(): v for k, v in var_shapes.items()}, sr)
+
+    for e in spec.einsum.expressions:
+        name = e.output.tensor
+        got = res.tensors[name]
+        decl = spec.einsum.declaration[name]
+        stored_order = (spec.mapping.rank_order.get(name) or decl)
+        ref = dense[name]
+        # got is in stored order; bring ref into the same order
+        perm = [decl.index(r) for r in stored_order]
+        ref_swz = np.transpose(ref, perm) if ref.ndim == len(perm) else ref
+        shape = [var_shapes[r.lower()] for r in stored_order]
+        got_dense = np.zeros(shape)
+        for path, val in got.iter_leaves():
+            got_dense[tuple(path)] = val
+        if not np.allclose(got_dense, ref_swz, atol=atol):
+            return False
+    return True

@@ -1,0 +1,126 @@
+"""Instrumentation interface: the simulator generator emits access/compute
+events; performance-model components consume them online (TeAAL Sec. 4.3
+"trace generation" / "trace consumption" -- we stream rather than
+materialize giant trace files, with an optional collector for tests).
+"""
+from __future__ import annotations
+
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class Instrumentation:
+    """Event sink. All methods are no-ops; subclasses override."""
+
+    def begin_einsum(self, einsum: str) -> None: ...
+
+    def end_einsum(self, einsum: str) -> None: ...
+
+    # storage: element touch. path = coords root->here, kind 'coord'|'payload'
+    def touch(self, einsum: str, tensor: str, rank: str,
+              path: Tuple, kind: str, rw: str) -> None: ...
+
+    # loop rank advanced to a new coordinate (epoch marker for buffets)
+    def advance(self, einsum: str, rank: str) -> None: ...
+
+    # sequencer: one coordinate enumerated at this loop rank
+    def iterate(self, einsum: str, rank: str, n: int = 1,
+                coord=None) -> None: ...
+
+    # compute op executed ('mul'|'add')
+    def compute(self, einsum: str, op: str, n: int = 1) -> None: ...
+
+    # intersection: one pointer advance on `tensor` at `rank`
+    def isect_step(self, einsum: str, rank: str, tensor: str,
+                   n: int = 1) -> None: ...
+
+    def isect_match(self, einsum: str, rank: str, n: int = 1) -> None: ...
+
+    # online rank swizzle: merge `elements` leaves from `lists` sorted runs
+    def merge(self, einsum: str, tensor: str, elements: int,
+              lists: int) -> None: ...
+
+
+class NullInstr(Instrumentation):
+    pass
+
+
+@dataclass
+class CollectingInstr(Instrumentation):
+    """Counts everything; optionally records full touch traces."""
+    record_touches: bool = False
+    touches: List[Tuple] = field(default_factory=list)
+    touch_counts: Counter = field(default_factory=Counter)
+    iter_counts: Counter = field(default_factory=Counter)
+    compute_counts: Counter = field(default_factory=Counter)
+    isect_steps: Counter = field(default_factory=Counter)
+    isect_matches: Counter = field(default_factory=Counter)
+    advances: Counter = field(default_factory=Counter)
+    merges: List[Tuple[str, str, int, int]] = field(default_factory=list)
+
+    def touch(self, einsum, tensor, rank, path, kind, rw):
+        self.touch_counts[(einsum, tensor, rank, kind, rw)] += 1
+        if self.record_touches:
+            self.touches.append((einsum, tensor, rank, path, kind, rw))
+
+    def advance(self, einsum, rank):
+        self.advances[(einsum, rank)] += 1
+
+    def iterate(self, einsum, rank, n=1, coord=None):
+        self.iter_counts[(einsum, rank)] += n
+
+    def compute(self, einsum, op, n=1):
+        self.compute_counts[(einsum, op)] += n
+
+    def isect_step(self, einsum, rank, tensor, n=1):
+        self.isect_steps[(einsum, rank, tensor)] += n
+
+    def isect_match(self, einsum, rank, n=1):
+        self.isect_matches[(einsum, rank)] += n
+
+    def merge(self, einsum, tensor, elements, lists):
+        self.merges.append((einsum, tensor, elements, lists))
+
+
+class TeeInstr(Instrumentation):
+    """Fan out events to several sinks."""
+
+    def __init__(self, *sinks: Instrumentation):
+        self.sinks = [s for s in sinks if s is not None]
+
+    def begin_einsum(self, einsum):
+        for s in self.sinks:
+            s.begin_einsum(einsum)
+
+    def end_einsum(self, einsum):
+        for s in self.sinks:
+            s.end_einsum(einsum)
+
+    def touch(self, *a):
+        for s in self.sinks:
+            s.touch(*a)
+
+    def advance(self, *a):
+        for s in self.sinks:
+            s.advance(*a)
+
+    def iterate(self, *a, **k):
+        for s in self.sinks:
+            s.iterate(*a, **k)
+
+    def compute(self, *a, **k):
+        for s in self.sinks:
+            s.compute(*a, **k)
+
+    def isect_step(self, *a, **k):
+        for s in self.sinks:
+            s.isect_step(*a, **k)
+
+    def isect_match(self, *a, **k):
+        for s in self.sinks:
+            s.isect_match(*a, **k)
+
+    def merge(self, *a):
+        for s in self.sinks:
+            s.merge(*a)

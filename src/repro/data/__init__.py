@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, ShardedSyntheticDataset,
+                                 mix_datasets)
+
+__all__ = ["DataConfig", "ShardedSyntheticDataset", "mix_datasets"]

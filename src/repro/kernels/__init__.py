@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling), with jit'd wrappers in ops.py and pure-jnp oracles in
+ref.py.  On this CPU container they execute in interpret mode
+(validated by tests/test_kernels.py shape/dtype sweeps); on TPU the
+same calls compile to Mosaic.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.intersect import intersect_sorted
+from repro.kernels.ssd_chunk import ssd_chunk
+
+__all__ = ["ops", "ref", "block_sparse_matmul", "flash_attention",
+           "intersect_sorted", "ssd_chunk"]

@@ -1,0 +1,95 @@
+"""Bitmap block-sparse matmul Pallas TPU kernel (SIGMA adapted to TPU).
+
+SIGMA [HPCA'20] fills an irregular PE array with only the nonzero
+elements of the stationary matrix via a Benes network; there is no TPU
+analogue of element-granular PE filling (the MXU is a rigid 128x128
+systolic array).  The TPU-native reading of SIGMA's insight -- *spend
+compute only where the stationary operand is nonzero* -- is
+tile-granular: a bitmap over (bm x bk) tiles of A (SIGMA's bitmap
+format lowered to tile granularity), a compaction of the nonzero tiles
+(SIGMA's take()/filter cascade, Fig. 8c), and dense MXU matmuls over
+the compacted tile list.
+
+TeAAL view: A's [M, K] ranks are uniform_shape-partitioned to
+[M1, K1, M0, K0], the (M1, K1) upper ranks are *flattened* to a single
+rank T whose fibertree is compressed (only nonzero tiles are present:
+the occupancy form), and T is the sequential loop rank of the mapped
+Einsum.  tile_rows/tile_cols are T's coordinate arrays -- exactly the
+paper's compressed-fiber (C-format) coordinate storage.
+
+The kernel uses PrefetchScalarGridSpec: the tile coordinate arrays are
+scalar-prefetched so BlockSpec index_maps can route each compacted tile
+to the right B / Z blocks (the TeAAL 'binding' of T's coordinates to
+the address generators).
+
+Grid: (n_nblocks, n_tiles); tiles are sorted by (row, col) so Z blocks
+are revisited consecutively, accumulated in the out ref (TPU grids are
+serial), initialized on first touch of each (row, nj).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _bsmm_kernel(rows_ref, cols_ref, a_ref, b_ref, z_ref, *, bm: int,
+                 bn: int):
+    t = pl.program_id(1)
+
+    row = rows_ref[t]
+    prev_row = rows_ref[jnp.maximum(t - 1, 0)]
+    first = (t == 0) | (row != prev_row)
+
+    @pl.when(first)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    a = a_ref[0].astype(jnp.float32)               # [bm, bk]
+    b = b_ref[...].astype(jnp.float32)             # [bk, bn]
+    z_ref[...] += jax.lax.dot(a, b,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "bn", "interpret"))
+def block_sparse_matmul(a_tiles: jnp.ndarray, tile_rows: jnp.ndarray,
+                        tile_cols: jnp.ndarray, b: jnp.ndarray,
+                        m: int, bn: int = DEFAULT_BN,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Z[m, n] = sum_t A_tile[t] @ B[cols[t]] scattered to rows[t].
+
+    a_tiles: [T, bm, bk] compacted nonzero tiles sorted by (row, col);
+    tile_rows/tile_cols: [T] int32 tile indices; b: [K, N]; ``m`` is the
+    number of logical rows of A.  Empty tile lists are padded with
+    (row=T-1 sentinel) zero tiles by the caller (``ops.compact_tiles``).
+    """
+    T, bm, bk = a_tiles.shape
+    K, N = b.shape
+    bn = min(bn, N)
+    n_nb = pl.cdiv(N, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_nb, T),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda nj, t, rows, cols: (t, 0, 0)),
+            pl.BlockSpec((bk, bn),
+                         lambda nj, t, rows, cols: (cols[t], nj)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda nj, t, rows, cols: (rows[t], nj)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bsmm_kernel, bm=bm, bn=bn),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, N), jnp.float32),
+        interpret=interpret,
+    )(tile_rows, tile_cols, a_tiles, b)

@@ -1,0 +1,141 @@
+"""Blocked (flash) attention Pallas TPU kernel.
+
+TeAAL view (DESIGN.md): the kernel is the mapped Einsum cascade
+
+    S[q, k] = Q[q, d] * K[k, d]
+    P[q, k] = softmax_k(S[q, k])          (streaming / online)
+    O[q, d] = P[q, k] * V[k, d]
+
+with *uniform_shape* partitioning of Q and KV ranks into VMEM-sized
+tiles and loop order [B, H, Q1, K1, (Q0, K0, D)]; the K1 rank is
+temporal (sequential) so the online-softmax carry (m, l, acc) lives in
+VMEM scratch across K1 steps -- the TPU-idiomatic analogue of Gamma's
+merger keeping partial outputs on chip instead of spilling partial
+products to HBM.
+
+Grid: (batch, q_heads, nq, nk); the kv block index is innermost so the
+accumulator is revisited consecutively (TPU grids execute serially).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref,
+                 *, scale: float, causal: bool, block_q: int,
+                 block_k: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+    # zero the ragged tail of the last kv block: its contents are
+    # padding (p == 0 there, but 0 * garbage-inf would still be NaN)
+    kv_valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < kv_len
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    span_q = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    span_k = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = span_k < kv_len                          # ragged kv tail
+    if causal:
+        mask = mask & (span_q >= span_k)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [b, h, sq, d]; k, v: [b, hkv, sk, d] with h % hkv == 0.
+
+    GQA is handled by repeating kv heads logically (index_map folds the
+    query head onto its kv group), so no materialized repeat.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, kv_len=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) online-softmax carry in VMEM
+            pl_scratch((block_q, 1), jnp.float32),
+            pl_scratch((block_q, 1), jnp.float32),
+            pl_scratch((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def pl_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

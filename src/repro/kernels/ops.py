@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode -- the
+kernel body runs in Python for correctness validation; on TPU the same
+calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import block_sparse_matmul as _bsmm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import intersect as _isect
+from repro.kernels import ssd_chunk as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jnp.ndarray:
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=not _on_tpu())
+
+
+def ssd_chunk(x, a, b, c) -> jnp.ndarray:
+    return _ssd.ssd_chunk(x, a, b, c, interpret=not _on_tpu())
+
+
+def intersect_sorted(a, b, block: int = 1024) -> jnp.ndarray:
+    return _isect.intersect_sorted(a, b, block=block,
+                                   interpret=not _on_tpu())
+
+
+def pad_sorted(coords: np.ndarray, multiple: int = 1024) -> np.ndarray:
+    """Pad a sorted int32 coordinate array with INT32_MAX to a block
+    multiple (the kernel's input contract)."""
+    n = len(coords)
+    n_pad = -(-max(n, 1) // multiple) * multiple
+    out = np.full(n_pad, np.iinfo(np.int32).max, np.int32)
+    out[:n] = coords
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# block-sparse matmul: host-side tile compaction (the SIGMA filter
+# cascade S = take(A, B, 0); T = take(A, S, 0) at tile granularity)
+# ---------------------------------------------------------------------- #
+def compact_tiles(a: np.ndarray, bm: int = 128, bk: int = 128
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Compact the nonzero (bm x bk) tiles of ``a``.
+
+    Returns (a_tiles [T, bm, bk], rows [T], cols [T]) sorted by
+    (row, col), padded so every tile-row appears at least once (zero
+    tile at col 0) -- guaranteeing each output block is initialized.
+    """
+    a = np.asarray(a)
+    m, k = a.shape
+    assert m % bm == 0 and k % bk == 0
+    nr, nc = m // bm, k // bk
+    tiles, rows, cols = [], [], []
+    for i in range(nr):
+        row_tiles = 0
+        for j in range(nc):
+            t = a[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk]
+            if np.any(t != 0):
+                tiles.append(t)
+                rows.append(i)
+                cols.append(j)
+                row_tiles += 1
+        if row_tiles == 0:                      # keep output block defined
+            tiles.append(np.zeros((bm, bk), a.dtype))
+            rows.append(i)
+            cols.append(0)
+    return (np.stack(tiles), np.asarray(rows, np.int32),
+            np.asarray(cols, np.int32))
+
+
+def block_sparse_matmul(a_tiles, rows, cols, b, m: int,
+                        bn: int = 128) -> jnp.ndarray:
+    return _bsmm.block_sparse_matmul(a_tiles, rows, cols, b, m=m, bn=bn,
+                                     interpret=not _on_tpu())
+
+
+def block_sparse_matmul_dense_a(a: np.ndarray, b, bm: int = 128,
+                                bk: int = 128, bn: int = 128
+                                ) -> jnp.ndarray:
+    """Convenience: compact a dense-with-zero-tiles A, then multiply."""
+    tiles, rows, cols = compact_tiles(np.asarray(a), bm, bk)
+    return block_sparse_matmul(tiles, rows, cols, b, m=a.shape[0], bn=bn)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose authority)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: [b, h, sq, d]; k, v: [b, hkv, sk, d] (GQA broadcast)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    qr = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qr, kf) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def block_sparse_matmul_ref(a_masked: jnp.ndarray,
+                            b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle over the tile-masked dense A (float32 accumulate)."""
+    return (a_masked.astype(jnp.float32) @ b.astype(jnp.float32))
+
+
+def tile_mask(a: np.ndarray, bm: int, bk: int) -> np.ndarray:
+    """Zero out (bm x bk) tiles of ``a`` that are entirely zero (no-op
+    numerically -- returns ``a`` with the same nonzero tiles)."""
+    m, k = a.shape
+    out = np.zeros_like(a)
+    for i in range(0, m, bm):
+        for j in range(0, k, bk):
+            t = a[i:i + bm, j:j + bk]
+            if np.any(t != 0):
+                out[i:i + bm, j:j + bk] = t
+    return out
+
+
+def ssd_chunk_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                  c: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, nc, l, H, P]; a: [B, H, nc, l]; b, c: [B, nc, l, N]."""
+    from repro.models.ssm import _segsum
+    Lmask = jnp.exp(_segsum(a.astype(jnp.float32)))    # [B,H,nc,l,l]
+    g = jnp.einsum("bcln,bcsn->bcls", c.astype(jnp.float32),
+                   b.astype(jnp.float32))
+    return jnp.einsum("bcls,bhcls,bcshp->bclhp", g, Lmask,
+                      x.astype(jnp.float32))
+
+
+def intersect_sorted_ref(a, b) -> jnp.ndarray:
+    """Oracle for the sorted-coordinate intersection kernel."""
+    import numpy as np
+    PAD = np.iinfo(np.int32).max
+    a = np.asarray(a)
+    b = np.asarray(b)
+    pos = np.searchsorted(b, a)
+    pos_c = np.clip(pos, 0, len(b) - 1)
+    hit = (b[pos_c] == a) & (a != PAD)
+    return jnp.asarray(np.where(hit, pos_c, -1).astype(np.int32))

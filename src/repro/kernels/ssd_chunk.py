@@ -1,0 +1,76 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+The quadratic stage of the SSD cascade (repro.models.ssm.ssd, stage 1):
+
+    G[l, s]  = C[l, n] * B[s, n]                 (chunk-local 'attention')
+    Y[l, p]  = (G[l, s] . L[l, s]) * X[s, p]     (masked by causal decay)
+
+where L = exp(segsum(a)) is the lower-triangular decay mask.  One grid
+step processes one (batch, head, chunk) cell entirely in VMEM: with
+chunk length l=256, state n=128, head dim p=64, the working set is
+~0.5 MB -- sized to VMEM, with both matmuls on MXU-aligned shapes.
+
+TeAAL view: the S rank is uniform_shape-partitioned into chunks, the
+chunk rank is temporal at this kernel's level (the inter-chunk
+recurrence is stage 3 of the cascade, outside the kernel), and (B, H)
+are spatial (the grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref, y_ref):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)      # [l, p]
+    a = a_ref[0, 0, 0].astype(jnp.float32)         # [l]
+    b = b_ref[0, 0].astype(jnp.float32)            # [l, n]
+    c = c_ref[0, 0].astype(jnp.float32)            # [l, n]
+    l = a.shape[0]
+
+    # G[l, s] = C . B^T
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # decay mask L[i, j] = exp(cum_a[i] - cum_a[j]) for j <= i
+    cum = jnp.cumsum(a)
+    li = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    diff = cum[:, None] - cum[None, :]
+    mask = li >= lj
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+
+    y = jax.lax.dot(g * decay, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+              c: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    """Intra-chunk SSD outputs.
+
+    x: [B, nc, l, H, P] (pre-multiplied by dt); a: [B, H, nc, l];
+    b, c: [B, nc, l, N].  Returns y_diag: [B, nc, l, H, P] (float32).
+    """
+    B, nc, l, H, P = x.shape
+    N = b.shape[-1]
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, 1, P),
+                         lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, l), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, l, N), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, l, N), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, l, 1, P),
+                               lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, l, H, P), jnp.float32),
+        interpret=interpret,
+    )(x, a, b, c)

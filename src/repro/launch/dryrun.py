@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks
+# the device count on first init), so no `from __future__` here.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step function for the shape's kind (train / prefill /
+     decode) and its ShapeDtypeStruct input specs (no allocation),
+  3. jit-lowers with explicit in/out shardings and compiles,
+  4. records memory_analysis / cost_analysis / parsed collective bytes
+     into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, cells
+from repro.launch import hlo_analysis as H
+from repro.launch import sharding as S
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.sharding import logical
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _tree_shardings(tree: Any, mesh: Mesh, spec_tree: Any = None):
+    if spec_tree is None:
+        return jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), tree)
+    return jax.tree_util.tree_map(
+        lambda _, s: NamedSharding(mesh, s), tree, spec_tree)
+
+
+def shardings_for(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  specs: Dict[str, Any]):
+    """in_shardings matching ``steps.input_specs`` ordering."""
+    # decode serves from TP-sharded, data-replicated weights (no
+    # optimizer to co-locate; FSDP would re-gather params every token)
+    ps = S.param_pspecs(specs["params"], mesh,
+                        fsdp=(shape.kind != "decode"))
+    p_shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), ps)
+    if shape.kind == "train":
+        o_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            S.param_pspecs(specs["opt_state"], mesh))
+        b_p = S.batch_pspecs(cfg, shape, mesh)
+        b_shard = {k: NamedSharding(mesh, b_p[k]) for k in specs["batch"]}
+        return (p_shard, o_shard, b_shard)
+    if shape.kind == "prefill":
+        b_p = S.batch_pspecs(cfg, shape, mesh)
+        b_shard = {k: NamedSharding(mesh, b_p[k]) for k in specs["batch"]}
+        return (p_shard, b_shard)
+    c_p = S.cache_pspecs(cfg, shape.global_batch, shape.seq_len, mesh)
+    c_shard = {k: NamedSharding(mesh, c_p[k]) for k in specs["cache"]}
+    t_shard = NamedSharding(mesh, S.token_pspec(shape.global_batch, mesh))
+    return (p_shard, c_shard, t_shard, t_shard)
+
+
+def probe_config(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same arch with k layer-units, UNROLLED (scan off).
+
+    XLA's cost analysis counts while-loop bodies once (verified:
+    scan(8 matmuls) reports 1 matmul), so per-layer costs are
+    calibrated from unrolled 1- and 2-unit compiles and extrapolated
+    linearly -- exact, because total cost is affine in the unit count.
+    A 'unit' is a layer (dense/moe/ssm), a superblock (hybrid), or an
+    encoder+decoder layer pair (encdec, where enc_layers==n_layers).
+    """
+    import dataclasses
+    kw: Dict[str, Any] = {"scan_layers": False}
+    if cfg.family == "hybrid":
+        kw["n_layers"] = k * cfg.hybrid_block
+    else:
+        kw["n_layers"] = k
+    if cfg.family == "encdec":
+        kw["enc_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def n_units(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_block
+    return cfg.n_layers
+
+
+def _lower_compile(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    specs = steps.input_specs(cfg, shape)
+    step = steps.step_for(cfg, shape)
+    in_shardings = shardings_for(cfg, shape, mesh, specs)
+    args = {
+        "train": ("params", "opt_state", "batch"),
+        "prefill": ("params", "batch"),
+        "decode": ("params", "cache", "token", "pos"),
+    }[shape.kind]
+    arg_specs = [specs[a] for a in args]
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        lowered = jitted.lower(*arg_specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cell_costs(compiled) -> Dict[str, float]:
+    costs = H.extract_costs(compiled)
+    coll = H.parse_collectives(compiled.as_text())
+    return {"flops": costs["flops"], "hbm_bytes": costs["bytes"],
+            "collective_wire_bytes": coll.total_wire_bytes,
+            "_coll": coll}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, verbose: bool = True,
+             probes: bool = True) -> Dict[str, Any]:
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    if (shape.kind == "prefill" and cfg.family in ("dense", "vlm")
+            and cfg.d_model >= 3500):
+        # Megatron-style sequence parallelism: -25% collective wire on
+        # prefill for wide models (perf iteration 12); train is left off
+        # (remat x SP measured +39% HBM) and narrow models are left off
+        # (olmo-1b measured +47% collective: the per-layer AG/RS pair
+        # costs more than the saved all-reduce below ~2.5k width).
+        import dataclasses
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "pure full-attention arch: 500k dense-KV decode "
+                         "is quadratic with no sparsity mechanism "
+                         "(DESIGN.md Arch-applicability)"}
+        if save:
+            _save(rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    logical.set_mesh(mesh)
+    logical.set_rules(S.rules_for(shape.kind))
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "chips": n_chips(mesh),
+                           "kind": shape.kind}
+    try:
+        lowered, compiled = _lower_compile(cfg, shape, mesh)
+        t_compile = time.time() - t0
+
+        memory = H.extract_memory(compiled)
+        full = _cell_costs(compiled)
+        coll = full.pop("_coll")
+        rec.update({
+            "status": "ok",
+            "compile_s": round(t_compile, 2),
+            "collective_ops": coll.ops,
+            "collective_bytes_by_op": coll.bytes_by_op,
+            "memory_analysis": memory,
+            **full,
+        })
+
+        # scan-aware calibration: unrolled 1- and 2-unit probes; total
+        # cost is affine in unit count, so corrected = p1 + (U-1)(p2-p1)
+        if probes:
+            t1 = time.time()
+            p1 = _cell_costs(_lower_compile(probe_config(cfg, 1), shape,
+                                            mesh)[1])
+            p2 = _cell_costs(_lower_compile(probe_config(cfg, 2), shape,
+                                            mesh)[1])
+            U = n_units(cfg)
+            for key in ("flops", "hbm_bytes", "collective_wire_bytes"):
+                rec[key + "_corrected"] = (
+                    p1[key] + (U - 1) * (p2[key] - p1[key]))
+            rec["probe_s"] = round(time.time() - t1, 2)
+        if verbose:
+            fc = rec.get("flops_corrected", rec["flops"])
+            hc = rec.get("hbm_bytes_corrected", rec["hbm_bytes"])
+            cc = rec.get("collective_wire_bytes_corrected",
+                         rec["collective_wire_bytes"])
+            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                  f"flops={fc:.3e} hbm={hc:.3e}B coll={cc:.3e}B "
+                  f"(compile {t_compile:.1f}s probes "
+                  f"{rec.get('probe_s', 0)}s)")
+            print("  memory_analysis:", memory)
+            print("  collectives:", coll.ops)
+    except Exception as ex:
+        rec.update({"status": "error", "error": f"{type(ex).__name__}: "
+                    f"{ex}"[:2000]})
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {mesh_name}: {ex}")
+            traceback.print_exc()
+    finally:
+        logical.set_mesh(None)
+        logical.set_rules(None)
+
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: Dict[str, Any]) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=C.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--archs", type=str, default=None,
+                    help="comma-separated arch subset (with --all)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        archs = (args.archs.split(",") if args.archs else C.ARCH_IDS)
+        pairs = [(a, s) for a in archs
+                 for s in list(SHAPES)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in pairs:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_err += rec["status"] == "error"
+    print(f"\ndry-run summary: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective
+traffic; we parse the optimized HLO module text (``compiled.as_text()``)
+and sum the result sizes of every collective op, with per-op wire-byte
+multipliers (ring algorithms):
+
+    all-reduce        2x result bytes   (reduce-scatter + all-gather)
+    all-gather        1x result bytes   (each device receives ~result)
+    reduce-scatter    gx result bytes   (input = g x output flows through)
+    all-to-all        1x result bytes
+    collective-permute 1x result bytes
+
+Shapes in a partitioned module are per-device, so result bytes already
+measure per-device traffic (within the (g-1)/g ring factor).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# one HLO instruction: "%name = <shape-or-tuple> op-name(...)"
+_INSTR_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> float:
+    """Bytes of one shape or tuple-of-shapes literal."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, int] = field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    total_wire_bytes: float = 0.0
+
+    def add(self, op: str, wire_bytes: float) -> None:
+        self.ops[op] = self.ops.get(op, 0) + 1
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + wire_bytes
+        self.total_wire_bytes += wire_bytes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        base = op.replace("-start", "")
+        result_bytes = _shape_bytes(shape_text)
+        if op.endswith("-start") and base in ("all-reduce", "all-gather",
+                                              "collective-permute"):
+            # async start returns (operand, result) tuples: halve
+            result_bytes /= 2.0
+
+        gsize = _group_size(line)
+        if base == "all-reduce":
+            wire = 2.0 * result_bytes
+        elif base == "reduce-scatter":
+            wire = float(gsize or 1) * result_bytes
+        else:
+            wire = result_bytes
+        stats.add(base, wire)
+    return stats
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return None
+
+
+# ---------------------------------------------------------------------- #
+# cost-analysis extraction (robust across jax versions)
+# ---------------------------------------------------------------------- #
+def extract_costs(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    if bytes_accessed == 0.0:
+        bytes_accessed = sum(float(v) for k, v in ca.items()
+                             if k.startswith("bytes accessed"))
+    return {"flops": flops, "bytes": bytes_accessed}
+
+
+def extract_memory(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state -- the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1) -> Mesh:
+    """Arbitrary (pod) x data x model mesh (smoke tests use 1x1)."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """Axis name -> size; works for Mesh and AbstractMesh."""
+    return dict(mesh.shape)
+
+
+def n_chips(mesh) -> int:
+    out = 1
+    for s in mesh_axis_sizes(mesh).values():
+        out *= s
+    return out

@@ -1,0 +1,159 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x 197e12)
+    memory term     = HLO_bytes / (chips x 819e9)
+    collective term = collective_wire_bytes / (chips x 50e9)
+
+using the scan-corrected (probe-extrapolated) totals.  The JSON stores
+PER-DEVICE partitioned-module numbers, so terms divide by chips=1 here
+(each device's work against each device's peak) -- equivalent to the
+global/chips form.  Also reports MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import repro.configs as C
+from repro.configs.base import (SHAPES, ModelConfig, active_param_count,
+                                param_count)
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    flops_ratio: float           # MODEL_FLOPS / HLO_FLOPs (global)
+    status: str = "ok"
+    note: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_seconds(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bottleneck term: 1.0 = compute-bound at peak."""
+        t = self.step_seconds
+        return self.compute_s / t if t > 0 else 0.0
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode D = global_batch
+    tokens; train/prefill D = batch x seq tokens.  Train includes
+    fwd+bwd (the 6 covers it); prefill/decode are fwd-only (2*N*D)."""
+    shape = SHAPES[shape_name]
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # one token per request
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def cell_roofline(arch: str, shape: str, mesh: str
+                  ) -> Optional[CellRoofline]:
+    rec = load_cell(arch, shape, mesh)
+    if rec is None:
+        return None
+    cfg = C.get(arch)
+    if rec["status"] == "skipped":
+        return CellRoofline(arch, shape, mesh, 0, 0, 0, 0, 0, 0, 0,
+                            status="skipped",
+                            note=rec.get("reason", ""))
+    if rec["status"] != "ok":
+        return CellRoofline(arch, shape, mesh, 0, 0, 0, 0, 0, 0, 0,
+                            status="error", note=rec.get("error", ""))
+    chips = rec["chips"]
+    flops = rec.get("flops_corrected", rec["flops"])          # per device
+    hbm = rec.get("hbm_bytes_corrected", rec["hbm_bytes"])
+    coll = rec.get("collective_wire_bytes_corrected",
+                   rec["collective_wire_bytes"])
+    mf = model_flops(cfg, shape)
+    hlo_global = flops * chips
+    return CellRoofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll / LINK_BW,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        flops_ratio=mf / hlo_global if hlo_global else 0.0,
+    )
+
+
+def full_table(mesh: str = "pod_16x16") -> List[CellRoofline]:
+    out = []
+    for arch in C.ARCH_IDS:
+        for shape in SHAPES:
+            cell = cell_roofline(arch, shape, mesh)
+            if cell is not None:
+                out.append(cell)
+    return out
+
+
+def format_table(cells: List[CellRoofline]) -> str:
+    hdr = (f"{'arch':<22} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+           f"{'collect_s':>10} {'bound':>10} {'MODEL/HLO':>10} "
+           f"{'roofline%':>10}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c.status == "skipped":
+            lines.append(f"{c.arch:<22} {c.shape:<12} "
+                         f"{'skip: ' + c.note[:58]}")
+            continue
+        if c.status == "error":
+            lines.append(f"{c.arch:<22} {c.shape:<12} ERROR {c.note[:50]}")
+            continue
+        lines.append(
+            f"{c.arch:<22} {c.shape:<12} {c.compute_s:>10.3e} "
+            f"{c.memory_s:>10.3e} {c.collective_s:>10.3e} "
+            f"{c.dominant:>10} {c.flops_ratio:>10.3f} "
+            f"{100 * c.roofline_fraction:>9.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        cells = full_table(mesh)
+        if not cells:
+            continue
+        print(f"\n=== roofline ({mesh}) ===")
+        print(format_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Concrete shardings for params / batches / caches on the production
+mesh.
+
+Parameter sharding policy (the compiled form of the TeAAL mapping's
+spatial ranks, DESIGN.md):
+  * TP: the last dimension divisible by the ``model`` axis size is
+    sharded over ``model`` (matmul contracting/output dims);
+  * FSDP/ZeRO: the largest *remaining* dimension divisible by the
+    ``data`` axis size is sharded over ``data`` -- optimizer states
+    inherit the param spec, so states are fully sharded too;
+  * pods: parameters are replicated across the ``pod`` axis (pure DP
+    between pods; gradient all-reduce over ``pod`` is the inter-pod
+    collective the roofline's third term sees).
+
+Divisibility-aware: dimensions that do not divide stay replicated
+(e.g. granite's single KV head never shards over the 16-way model
+axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import mesh_axis_sizes
+from repro.sharding.logical import AxisRules
+
+Params = Any
+
+
+# ---------------------------------------------------------------------- #
+# activation rules (TeAAL spacetime -> mesh axes)
+# ---------------------------------------------------------------------- #
+def train_rules() -> AxisRules:
+    return AxisRules({
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_cap": ("data",),
+        "expert_group": ("data",),
+        "sp": ("model",),
+        "kv_seq": ("model",),
+        "state": (),
+    })
+
+
+def decode_rules() -> AxisRules:
+    """Decode: the KV cache's sequence rank is the huge dimension --
+    shard it over (data, model); batch over pod."""
+    return AxisRules({
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_cap": ("data",),
+        "expert_group": ("data",),
+        "sp": ("model",),
+        "kv_seq": ("data", "model"),
+        "state": ("model",),
+    })
+
+
+def rules_for(kind: str) -> AxisRules:
+    return decode_rules() if kind == "decode" else train_rules()
+
+
+# ---------------------------------------------------------------------- #
+# parameter shardings
+# ---------------------------------------------------------------------- #
+def param_pspec(shape: Tuple[int, ...], tp: int, dp: int,
+                skip_leading: bool = True) -> P:
+    """TP on the last divisible dim, FSDP on the largest remaining."""
+    spec: list = [None] * len(shape)
+    start = 1 if (skip_leading and len(shape) >= 3) else 0  # scan layer dim
+    if tp > 1:
+        for i in reversed(range(start, len(shape))):
+            if shape[i] % tp == 0 and shape[i] >= tp:
+                spec[i] = "model"
+                break
+    if dp > 1:
+        cands = [i for i in range(len(shape))
+                 if spec[i] is None and shape[i] % dp == 0
+                 and shape[i] >= dp]
+        if cands:
+            i = max(cands, key=lambda j: shape[j])
+            spec[i] = "data"
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            names.append(k)
+    return tuple(names)
+
+
+def param_pspecs(params: Params, mesh: Mesh,
+                 fsdp: bool = True) -> Params:
+    """Path-aware parameter specs.
+
+    The embedding table is the one tensor the generic heuristic gets
+    wrong: it must be sharded on the VOCAB dim (so the tied lm-head
+    contraction yields vocab-sharded logits without a reshard), not on
+    d_model.  Everything else uses :func:`param_pspec`.
+
+    ``fsdp=False`` (decode/serving): params are TP-sharded only and
+    replicated across data -- there is no optimizer state to amortize,
+    and FSDP would all-gather every parameter once per generated token
+    (perf iteration 9, EXPERIMENTS.md SPerf).
+    """
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) if fsdp else 1
+
+    def spec(path, x):
+        names = _path_names(path)
+        leaf = names[-1] if names else ""
+        shape = x.shape
+        if leaf == "tok":                       # [vocab, d]
+            return P("model" if tp > 1 and shape[0] % tp == 0 else None,
+                     "data" if dp > 1 and shape[1] % dp == 0 else None)
+        if leaf == "head":                      # [d, vocab]
+            return P("data" if dp > 1 and shape[0] % dp == 0 else None,
+                     "model" if tp > 1 and shape[1] % tp == 0 else None)
+        if leaf in ("w_out", "wo"):
+            # down-projections contract over the TP-sharded hidden
+            # (ff / heads) dim: TP belongs on dim -2 (Megatron row
+            # parallel -> local partial matmul + one all-reduce), NOT on
+            # the output dim (which would force a full all-gather of
+            # the ff-sharded activations first).  Perf iteration 1, see
+            # EXPERIMENTS.md SPerf.
+            spec: list = [None] * len(shape)
+            if tp > 1 and shape[-2] % tp == 0:
+                spec[-2] = "model"
+            cands = [i for i in range(len(shape))
+                     if spec[i] is None and shape[i] % dp == 0
+                     and shape[i] >= dp]
+            if dp > 1 and cands:
+                spec[max(cands, key=lambda j: shape[j])] = "data"
+            return P(*spec)
+        return param_pspec(shape, tp, dp)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: Params, mesh: Mesh) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params, mesh))
+
+
+# ---------------------------------------------------------------------- #
+# batch / cache / token shardings
+# ---------------------------------------------------------------------- #
+def _dims_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+               mesh: Mesh, rules: AxisRules) -> P:
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = [a for a in rules.axes_for(name)
+                if a in sizes and a not in used]
+        keep, prod = [], 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        used.update(keep)
+        parts.append(None if not keep
+                     else keep[0] if len(keep) == 1 else tuple(keep))
+    return P(*parts)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                 ) -> Dict[str, P]:
+    rules = rules_for(shape.kind)
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _dims_spec((b, s), ("batch", "seq"), mesh, rules),
+        "labels": _dims_spec((b, s), ("batch", "seq"), mesh, rules),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = _dims_spec((b, cfg.n_patches, cfg.d_model),
+                                    ("batch", "seq", "embed"), mesh, rules)
+    if cfg.family == "encdec":
+        out["frames"] = _dims_spec((b, cfg.enc_frames, cfg.d_model),
+                                   ("batch", "seq", "embed"), mesh, rules)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh
+                 ) -> Dict[str, P]:
+    """PartitionSpec per decode-cache leaf, by family."""
+    rules = decode_rules()
+    from repro.models import api
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, max_len))
+
+    def leaf_spec(path: str, x) -> P:
+        nd = len(x.shape)
+        if path in ("k", "v"):                   # [L, b, s, kv, h]
+            return _dims_spec(x.shape,
+                              (None, "batch", "kv_seq", "kv_heads", None),
+                              mesh, rules)
+        if path in ("xk", "xv"):                 # cross-attn KV
+            return _dims_spec(x.shape,
+                              (None, "batch", "kv_seq", "kv_heads", None),
+                              mesh, rules)
+        if path == "ssm":                        # [L(,m), b, h, p, n]
+            logical = (None,) * (nd - 4) + ("batch", "heads", None, None)
+            return _dims_spec(x.shape, logical, mesh, rules)
+        if path == "conv":                       # [L(,m), b, k-1, convdim]
+            logical = (None,) * (nd - 3) + ("batch", None, "ff")
+            return _dims_spec(x.shape, logical, mesh, rules)
+        return P(*([None] * nd))
+
+    return {k: leaf_spec(k, v) for k, v in cache.items()}
+
+
+def token_pspec(batch: int, mesh: Mesh) -> P:
+    return _dims_spec((batch,), ("batch",), mesh, decode_rules())

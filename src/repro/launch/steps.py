@@ -1,0 +1,170 @@
+"""train / prefill / serve step builders + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation) -- the dry-run
+lowers against these for all 40 (arch x shape) cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.models import api
+from repro.optim import optimizers as opt
+
+Params = Any
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------- #
+# input specs (ShapeDtypeStructs; nothing is allocated)
+# ---------------------------------------------------------------------- #
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = SDS((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = SDS((b, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(
+        lambda: api.init(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+
+
+def opt_state_specs(cfg: ModelConfig, optimizer: opt.Optimizer) -> Params:
+    p = param_specs(cfg)
+    return jax.eval_shape(optimizer.init, p)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                optimizer: Optional[opt.Optimizer] = None
+                ) -> Dict[str, Any]:
+    """All inputs of the step this shape lowers (train/prefill/decode)."""
+    if shape.kind == "train":
+        optimizer = optimizer or opt.for_config(cfg)
+        return {
+            "params": param_specs(cfg),
+            "opt_state": opt_state_specs(cfg, optimizer),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs(cfg),
+            "batch": batch_specs(cfg, shape),
+        }
+    # decode: one new token against a seq_len KV cache
+    b = shape.global_batch
+    return {
+        "params": param_specs(cfg),
+        "cache": cache_specs(cfg, b, shape.seq_len),
+        "token": SDS((b,), jnp.int32),
+        "pos": SDS((b,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# step functions
+# ---------------------------------------------------------------------- #
+def make_train_step(cfg: ModelConfig,
+                    optimizer: Optional[opt.Optimizer] = None,
+                    clip_norm: float = 1.0,
+                    accum_steps: int = 1) -> Callable:
+    """One optimizer step.
+
+    ``accum_steps > 1`` splits the global batch into microbatches and
+    accumulates gradients under a ``lax.scan`` (sequential, so only one
+    microbatch's activations are live) -- the standard memory lever when
+    the per-step activation footprint exceeds HBM.  Gradients are
+    averaged, so the update is numerically the full-batch update (up to
+    fp reassociation); verified by tests.
+    """
+    optimizer = optimizer or opt.for_config(cfg)
+
+    def grads_of(params: Params, batch: Dict[str, jnp.ndarray]):
+        return jax.value_and_grad(
+            lambda p: api.loss_fn(cfg, p, batch))(params)
+
+    def train_step(params: Params, opt_state: Params,
+                   batch: Dict[str, jnp.ndarray]):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps,
+                                     x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / accum_steps).astype(p.dtype),
+                grads, params)
+        grads, gnorm = opt.clip_by_global_norm(grads, clip_norm)
+        new_params, new_state = optimizer.update(params, grads, opt_state,
+                                                 loss)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Forward logits over the full prompt (inference prefill)."""
+
+    def prefill_step(params: Params, batch: Dict[str, jnp.ndarray]):
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            return encdec.forward(cfg, params, batch["tokens"],
+                                  batch["frames"])
+        if cfg.family == "vlm":
+            from repro.models import transformer
+            return transformer.forward(cfg, params, batch["tokens"],
+                                       extra_embeds=batch["patches"])
+        if cfg.family in ("moe", "hybrid"):
+            logits, _aux = api._mod(cfg).forward(cfg, params,
+                                                 batch["tokens"])
+            return logits
+        return api._mod(cfg).forward(cfg, params, batch["tokens"])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params: Params, cache: Params, token: jnp.ndarray,
+                   pos: jnp.ndarray):
+        return api.serve_step(cfg, params, cache, token, pos)
+
+    return serve_step
+
+
+def step_for(cfg: ModelConfig, shape: ShapeSpec,
+             optimizer: Optional[opt.Optimizer] = None) -> Callable:
+    if shape.kind == "train":
+        return make_train_step(cfg, optimizer)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)

@@ -1,0 +1,83 @@
+"""Family-dispatching model API.
+
+Every architecture family exposes the same four entry points so the
+launcher / dry-run / trainer are family-agnostic:
+
+    init(cfg, key)                      -> params
+    loss_fn(cfg, params, batch)         -> scalar loss
+    init_cache(cfg, batch, max_len)     -> decode cache pytree
+    serve_step(cfg, params, cache, token, pos) -> (logits, cache)
+
+Batch layout per family:
+    dense/moe/ssm/hybrid: {tokens [b,s] int32, labels [b,s] int32}
+    vlm:                  + patches [b, n_patches, d_model]
+    encdec:               + frames  [b, enc_frames, d_model]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer
+
+Params = Dict[str, Any]
+
+
+def _mod(cfg: ModelConfig):
+    return {
+        "dense": transformer,
+        "vlm": transformer,
+        "moe": moe,
+        "ssm": ssm,
+        "hybrid": hybrid,
+        "encdec": encdec,
+    }[cfg.family]
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    return _mod(cfg).init(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    m = _mod(cfg)
+    if cfg.family == "vlm":
+        return transformer.loss_fn(cfg, params, batch)
+    return m.loss_fn(cfg, params, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    return _mod(cfg).serve_step(cfg, params, cache, token, pos)
+
+
+def make_batch(cfg: ModelConfig, key: jax.Array, batch: int,
+               seq: int) -> Dict[str, jnp.ndarray]:
+    """Random batch with the family's layout (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k3, (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        # labels cover only the token positions
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder backbone  [arXiv:2212.04356].
+
+The conv audio frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings ([b, enc_frames, d_model]) provided by
+``input_specs()``.  The encoder is bidirectional; the decoder has
+causal self-attention plus cross-attention into the encoder output.
+Position handling uses RoPE in place of Whisper's learned absolute
+embeddings (backbone-only fidelity; recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+def init_enc_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rmsnorm(cfg), "attn": L.init_attention(cfg, k1),
+            "ln2": L.init_rmsnorm(cfg), "ffn": L.init_ffn(cfg, k2)}
+
+
+def init_dec_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_rmsnorm(cfg), "self": L.init_attention(cfg, k1),
+            "lnx": L.init_rmsnorm(cfg), "cross": L.init_attention(cfg, k2),
+            "ln2": L.init_rmsnorm(cfg), "ffn": L.init_ffn(cfg, k3)}
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, k1, k2 = jax.random.split(key, 3)
+    if cfg.scan_layers:
+        enc = jax.vmap(lambda k: init_enc_block(cfg, k))(
+            jax.random.split(k1, cfg.enc_layers))
+        dec = jax.vmap(lambda k: init_dec_block(cfg, k))(
+            jax.random.split(k2, cfg.n_layers))
+    else:
+        enc = [init_enc_block(cfg, k)
+               for k in jax.random.split(k1, cfg.enc_layers)]
+        dec = [init_dec_block(cfg, k)
+               for k in jax.random.split(k2, cfg.n_layers)]
+    return {"embed": L.init_embedding(cfg, ke), "enc": enc, "dec": dec,
+            "ln_enc": L.init_rmsnorm(cfg), "ln_f": L.init_rmsnorm(cfg)}
+
+
+# ---------------------------------------------------------------------- #
+# encoder
+# ---------------------------------------------------------------------- #
+def encode(cfg: ModelConfig, params: Params,
+           frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: [b, enc_frames, d_model] (precomputed conv-stub output)."""
+    x = frames
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def blk_fwd(p, h):
+        h = h + L.attention(cfg, p["attn"], L.norm(cfg, p["ln1"], h), pos,
+                            causal=False)
+        return h + L.ffn(cfg, p["ffn"], L.norm(cfg, p["ln2"], h))
+
+    if cfg.scan_layers:
+        def body(carry, blk):
+            return blk_fwd(blk, carry), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    else:
+        bf = jax.checkpoint(blk_fwd) if cfg.remat else blk_fwd
+        for blk in params["enc"]:
+            x = bf(blk, x)
+    return L.norm(cfg, params["ln_enc"], x)
+
+
+# ---------------------------------------------------------------------- #
+# decoder (teacher-forced)
+# ---------------------------------------------------------------------- #
+def _cross_kv(cfg: ModelConfig, p: Params, enc_out: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, _ = enc_out.shape
+    nkv, h = cfg.n_kv_heads, cfg.hdim
+    k = (enc_out @ p["wk"]).reshape(b, s, nkv, h)
+    v = (enc_out @ p["wv"]).reshape(b, s, nkv, h)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(nkv, h)
+        v = v + p["bv"].reshape(nkv, h)
+    return k, v
+
+
+def dec_block_fwd(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  pos: jnp.ndarray, enc_out: jnp.ndarray) -> jnp.ndarray:
+    x = x + L.attention(cfg, p["self"], L.norm(cfg, p["ln1"], x), pos)
+    kv = _cross_kv(cfg, p["cross"], enc_out)
+    x = x + L.attention(cfg, p["cross"], L.norm(cfg, p["lnx"], x), pos,
+                        kv=kv)
+    return x + L.ffn(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            frames: jnp.ndarray) -> jnp.ndarray:
+    enc_out = encode(cfg, params, frames)
+    x = L.embed(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.scan_layers:
+        def body(carry, blk):
+            return dec_block_fwd(cfg, blk, carry, pos, enc_out), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+    else:
+        df = (jax.checkpoint(
+            lambda blk, h: dec_block_fwd(cfg, blk, h, pos, enc_out))
+            if cfg.remat
+            else (lambda blk, h: dec_block_fwd(cfg, blk, h, pos, enc_out)))
+        for blk in params["dec"]:
+            x = df(blk, x)
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["tokens"], batch["frames"])
+    return L.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------- #
+# decode: self-attn KV cache + precomputed cross-attn KV
+# ---------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    n, nkv, h = cfg.n_layers, cfg.n_kv_heads, cfg.hdim
+    return {
+        "k": jnp.zeros((n, batch, max_len, nkv, h), dtype),
+        "v": jnp.zeros((n, batch, max_len, nkv, h), dtype),
+        # cross-attention K/V: computed once from the encoder output
+        "xk": jnp.zeros((n, batch, cfg.enc_frames, nkv, h), dtype),
+        "xv": jnp.zeros((n, batch, cfg.enc_frames, nkv, h), dtype),
+    }
+
+
+def prime_cache(cfg: ModelConfig, params: Params, cache: Params,
+                frames: jnp.ndarray) -> Params:
+    """Run the encoder and fill the cross-attention K/V."""
+    enc_out = encode(cfg, params, frames)
+    if cfg.scan_layers:
+        def body(_, blk):
+            k, v = _cross_kv(cfg, blk["cross"], enc_out)
+            return 0, (k, v)
+        _, (xk, xv) = jax.lax.scan(body, 0, params["dec"])
+    else:
+        ks = [_cross_kv(cfg, blk["cross"], enc_out)
+              for blk in params["dec"]]
+        xk = jnp.stack([k for k, _ in ks])
+        xv = jnp.stack([v for _, v in ks])
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def _dec_block_step(cfg, p, x, ck, cv, xk, xv, pos):
+    a, ck, cv = L.attention_decode(cfg, p["self"],
+                                   L.norm(cfg, p["ln1"], x), ck, cv, pos)
+    x = x + a
+    x = x + L.attention(cfg, p["cross"], L.norm(cfg, p["lnx"], x),
+                        pos[:, None], kv=(xk, xv))
+    return x + L.ffn(cfg, p["ffn"], L.norm(cfg, p["ln2"], x)), ck, cv
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    x = L.embed(cfg, params["embed"], token[:, None])
+    if cfg.scan_layers:
+        def body(carry, inp):
+            blk, ck, cv, xk, xv = inp
+            y, ck, cv = _dec_block_step(cfg, blk, carry, ck, cv, xk, xv,
+                                        pos)
+            return y, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = {**cache, "k": ks, "v": vs}
+    else:
+        ks, vs = [], []
+        for i, blk in enumerate(params["dec"]):
+            x, ck, cv = _dec_block_step(cfg, blk, x, cache["k"][i],
+                                        cache["v"][i], cache["xk"][i],
+                                        cache["xv"][i], pos)
+            ks.append(ck); vs.append(cv)
+        cache = {**cache, "k": jnp.stack(ks), "v": jnp.stack(vs)}
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)[:, 0], cache

@@ -1,0 +1,201 @@
+"""Jamba-style hybrid Mamba+attention+MoE model  [arXiv:2403.19887].
+
+The layer stack is organized into *superblocks* of ``cfg.hybrid_block``
+layers (Jamba: 8).  Within a superblock, position ``hybrid_attn_idx``
+(Jamba: 4) is an attention layer and all others are Mamba layers; the
+FFN at odd positions is MoE and at even positions dense
+(``moe_every=2``).  Every superblock has an identical pytree structure,
+so the model scans over superblocks (72 layers = 9 identical
+superblocks), keeping the 512-device HLO compact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+def n_superblocks(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.hybrid_block == 0
+    return cfg.n_layers // cfg.hybrid_block
+
+
+def _is_attn(cfg: ModelConfig, pos: int) -> bool:
+    return pos == cfg.hybrid_attn_idx
+
+
+def _is_moe(cfg: ModelConfig, pos: int) -> bool:
+    return cfg.moe is not None and pos % cfg.moe_every == cfg.moe_every - 1
+
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+def init_superblock(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, cfg.hybrid_block)
+    sb: Params = {}
+    for i, k in enumerate(keys):
+        k1, k2 = jax.random.split(k)
+        layer: Params = {"ln1": L.init_rmsnorm(cfg),
+                         "ln2": L.init_rmsnorm(cfg)}
+        if _is_attn(cfg, i):
+            layer["attn"] = L.init_attention(cfg, k1)
+        else:
+            layer["mamba"] = SSM.init_mamba_layer(cfg, k1)
+        if _is_moe(cfg, i):
+            layer["moe"] = MOE.init_moe_layer(cfg, k2)
+        else:
+            layer["ffn"] = L.init_ffn(cfg, k2)
+        sb[f"layer{i}"] = layer
+    return sb
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kl = jax.random.split(key)
+    ns = n_superblocks(cfg)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_superblock(cfg, k))(
+            jax.random.split(kl, ns))
+    else:
+        blocks = [init_superblock(cfg, k) for k in jax.random.split(kl, ns)]
+    return {"embed": L.init_embedding(cfg, ke), "blocks": blocks,
+            "ln_f": L.init_rmsnorm(cfg)}
+
+
+# ---------------------------------------------------------------------- #
+# forward
+# ---------------------------------------------------------------------- #
+def superblock_fwd(cfg: ModelConfig, sb: Params, x: jnp.ndarray,
+                   pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.hybrid_block):
+        layer = sb[f"layer{i}"]
+        h = L.norm(cfg, layer["ln1"], x)
+        if _is_attn(cfg, i):
+            x = x + L.attention(cfg, layer["attn"], h, pos)
+        else:
+            x = x + SSM.mamba_layer(cfg, layer["mamba"], h)
+        h = L.norm(cfg, layer["ln2"], x)
+        if _is_moe(cfg, i):
+            y, aux = MOE.moe_ffn(cfg, layer["moe"], h)
+            aux_total = aux_total + aux
+        else:
+            y = L.ffn(cfg, layer["ffn"], h)
+        x = x + y
+    return x, aux_total
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = L.embed(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        def body(carry, sb):
+            y, a = carry
+            y2, aux = superblock_fwd(cfg, sb, y, pos)
+            return (y2, a + aux), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+    else:
+        sf = (jax.checkpoint(lambda sb, h: superblock_fwd(cfg, sb, h, pos))
+              if cfg.remat
+              else (lambda sb, h: superblock_fwd(cfg, sb, h, pos)))
+        for sb in params["blocks"]:
+            x, aux = sf(sb, x)
+            aux_total = aux_total + aux
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x), aux_total
+
+
+def loss_fn(cfg: ModelConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    loss = L.softmax_xent(logits, batch["labels"])
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------- #
+# decode
+# ---------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    ns = n_superblocks(cfg)
+    n_mamba = cfg.hybrid_block - 1
+    d_in, nh, p, n, conv_dim = SSM.dims(cfg)
+    return {
+        "k": jnp.zeros((ns, batch, max_len, cfg.n_kv_heads, cfg.hdim),
+                       dtype),
+        "v": jnp.zeros((ns, batch, max_len, cfg.n_kv_heads, cfg.hdim),
+                       dtype),
+        "ssm": jnp.zeros((ns, n_mamba, batch, nh, p, n), jnp.float32),
+        "conv": jnp.zeros((ns, n_mamba, batch, cfg.ssm.d_conv - 1,
+                           conv_dim), dtype),
+    }
+
+
+def superblock_decode(cfg: ModelConfig, sb: Params, x: jnp.ndarray,
+                      ck, cv, ssm_s, conv_s, pos: jnp.ndarray):
+    mi = 0
+    new_ssm, new_conv = [], []
+    for i in range(cfg.hybrid_block):
+        layer = sb[f"layer{i}"]
+        h = L.norm(cfg, layer["ln1"], x)
+        if _is_attn(cfg, i):
+            a, ck, cv = L.attention_decode(cfg, layer["attn"], h, ck, cv,
+                                           pos)
+            x = x + a
+        else:
+            y, ss, cs = SSM.mamba_decode(cfg, layer["mamba"], h,
+                                         ssm_s[mi], conv_s[mi])
+            new_ssm.append(ss)
+            new_conv.append(cs)
+            mi += 1
+            x = x + y
+        h = L.norm(cfg, layer["ln2"], x)
+        if _is_moe(cfg, i):
+            y, _ = MOE.moe_ffn(cfg, layer["moe"], h)
+        else:
+            y = L.ffn(cfg, layer["ffn"], h)
+        x = x + y
+    return x, ck, cv, jnp.stack(new_ssm), jnp.stack(new_conv)
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    x = L.embed(cfg, params["embed"], token[:, None])
+    if cfg.scan_layers:
+        def body(carry, inp):
+            sb, ck, cv, ss, cs = inp
+            y, ck, cv, ss, cs = superblock_decode(cfg, sb, carry, ck, cv,
+                                                  ss, cs, pos)
+            return y, (ck, cv, ss, cs)
+        x, (ks, vs, sss, css) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"],
+                      cache["ssm"], cache["conv"]))
+        cache = {"k": ks, "v": vs, "ssm": sss, "conv": css}
+    else:
+        ks, vs, sss, css = [], [], [], []
+        for i, sb in enumerate(params["blocks"]):
+            x, ck, cv, ss, cs = superblock_decode(
+                cfg, sb, x, cache["k"][i], cache["v"][i],
+                cache["ssm"][i], cache["conv"][i], pos)
+            ks.append(ck); vs.append(cv); sss.append(ss); css.append(cs)
+        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                 "ssm": jnp.stack(sss), "conv": jnp.stack(css)}
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)[:, 0], cache

@@ -1,0 +1,347 @@
+"""Composable transformer building blocks (pure-JAX, pytree params).
+
+Every block is a pair ``init_*`` (params) / ``apply`` function.  Blocks
+honor the architectural options required by the assigned fleet:
+qk_norm (qwen3), qkv bias (qwen2), non-parametric LayerNorm (olmo),
+GQA with any kv-head count (MQA for granite), swiglu/gelu FFNs.
+
+Sharding is expressed through logical-axis annotations
+(:func:`repro.sharding.logical.constrain`), compiled to PartitionSpecs
+by the TeAAL-mapping-driven rules in ``repro.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.logical import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# norms
+# ---------------------------------------------------------------------- #
+def init_rmsnorm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    if cfg.nonparam_ln:
+        return {}
+    return {"scale": jnp.ones((dim or cfg.d_model,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if "scale" in p:
+        y = y * p["scale"]
+    return y.astype(dt)
+
+
+def layernorm_np(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Non-parametric LayerNorm (olmo): normalize, no scale/bias."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.nonparam_ln:
+        return layernorm_np(x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------- #
+# rotary position embeddings
+# ---------------------------------------------------------------------- #
+def rope_freqs(cfg: ModelConfig) -> jnp.ndarray:
+    h = cfg.hdim
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, h, 2,
+                                                dtype=jnp.float32) / h))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray,
+               freqs: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; pos: [..., seq]."""
+    angles = pos[..., :, None, None].astype(jnp.float32) * freqs  # [...,s,1,h/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    # cast each half BEFORE the concat: K/V resharding collectives sit
+    # right after rope, and XLA otherwise gathers the f32 concat (2x
+    # wire bytes) before the bf16 convert (perf iteration 11)
+    dt = x.dtype
+    out = jnp.concatenate([(x1 * cos - x2 * sin).astype(dt),
+                           (x1 * sin + x2 * cos).astype(dt)], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# attention (GQA, optional qk-norm / qkv-bias)
+# ---------------------------------------------------------------------- #
+def init_attention(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, h, nh, nkv = cfg.d_model, cfg.hdim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = _dtype(cfg)
+    p: Params = {
+        "wq": (jax.random.normal(k1, (d, nh * h)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, nkv * h)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, nkv * h)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (nh * h, d)) * s).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * h,), dtype=dt)
+        p["bk"] = jnp.zeros((nkv * h,), dtype=dt)
+        p["bv"] = jnp.zeros((nkv * h,), dtype=dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((h,), dtype=jnp.float32)
+        p["k_norm"] = jnp.ones((h,), dtype=jnp.float32)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+         pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    nh, nkv, h = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, h)
+    k = k.reshape(b, s, nkv, h)
+    v = v.reshape(b, s, nkv, h)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    freqs = rope_freqs(cfg)
+    q = apply_rope(q, pos, freqs)
+    k = apply_rope(k, pos, freqs)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _attn_block(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                causal: bool, offset, scale: float) -> jnp.ndarray:
+    """One query block: q [b, cq, nh, h] x k/v [b, sk, nh, h].
+
+    The logits are constrained over ("heads", "kv_seq"): with the
+    divisibility fallback this shards heads over `model` when the head
+    count divides (grok/granite) and otherwise shards the KV sequence
+    (qwen3/qwen2/llava) -- sequence-parallel attention, so the scores
+    for one block never exceed ~1 GB/device at 32k context.
+    """
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = constrain(logits, ("batch", "heads", None, "kv_seq"))
+    if causal:
+        qpos = offset + jnp.arange(q.shape[1])
+        mask = qpos[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)
+
+
+def mha(cfg: ModelConfig, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+        causal: bool = True,
+        q_offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference attention: [b, sq, nh, h] x [b, sk, nkv, h].
+
+    GQA keys/values are repeated to the full head count (a logical
+    repeat XLA folds into the einsum) so sharding propagates through a
+    plain 4D einsum -- the grouped 5D form breaks SPMD propagation.
+    Long queries are processed in ``cfg.attn_chunk`` blocks under
+    ``lax.map`` with an inner checkpoint, so only one block's scores
+    are ever live (forward AND backward) -- the jnp analogue of the
+    flash kernel's K1-temporal mapping.
+    """
+    b, sq, nh, h = q.shape
+    _, sk, nkv, _ = k.shape
+    if nh != nkv:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = constrain(k, ("batch", "kv_seq", "heads", None))
+    v = constrain(v, ("batch", "kv_seq", "heads", None))
+    scale = 1.0 / math.sqrt(h)
+    base = q_offset if q_offset is not None else 0
+
+    chunk = cfg.attn_chunk
+    if not chunk or sq <= chunk:
+        return _attn_block(q, k, v, causal, base, scale)
+
+    nq = -(-sq // chunk)
+    pad = nq * chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qc = qp.reshape(b, nq, chunk, nh, h).transpose(1, 0, 2, 3, 4)
+    offs = base + jnp.arange(nq) * chunk
+
+    def body(args):
+        qb, off = args
+        return _attn_block(qb, k, v, causal, off, scale)
+
+    out = jax.lax.map(jax.checkpoint(body), (qc, offs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk, nh, h)
+    return out[:, :sq] if pad else out
+
+
+def _res_axes(cfg: ModelConfig):
+    """Residual-stream axes: sequence-sharded over `model` when
+    Megatron-style sequence parallelism is on (perf iteration 12)."""
+    return ("batch", "sp" if cfg.seq_parallel else "seq", "embed")
+
+
+def attention(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              pos: jnp.ndarray, causal: bool = True,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+              ) -> jnp.ndarray:
+    """Full attention block (no cache).  ``kv`` overrides keys/values for
+    cross-attention (whisper decoder)."""
+    if cfg.seq_parallel:
+        # the SP all-gather: un-shard seq before the column-parallel QKV
+        x = constrain(x, ("batch", "seq", "embed"))
+    b, s, d = x.shape
+    q, k, v = _qkv(cfg, p, x, pos)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    out = mha(cfg, q, k, v, causal=causal)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hdim)
+    # cast at the row-parallel boundary so the partial-sum all-reduce
+    # travels in bf16, not the f32 accumulator dtype (perf iter 10)
+    return constrain((out @ p["wo"]).astype(x.dtype), _res_axes(cfg))
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     pos: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode with a KV cache.
+
+    x: [b, 1, d]; cache_[kv]: [b, S, nkv, h]; pos: [b] absolute position.
+    """
+    b, _, d = x.shape
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
+    idx = pos[:, None, None, None]
+    oh = jax.nn.one_hot(pos, cache_k.shape[1], dtype=cache_k.dtype)
+    cache_k = cache_k * (1 - oh)[..., None, None] \
+        + oh[..., None, None] * k_new
+    cache_v = cache_v * (1 - oh)[..., None, None] \
+        + oh[..., None, None] * v_new
+    cache_k = constrain(cache_k, ("batch", "kv_seq", "kv_heads", None))
+    cache_v = constrain(cache_v, ("batch", "kv_seq", "kv_heads", None))
+    # mask out cache slots beyond pos
+    nh, nkv, h = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    group = nh // nkv
+    qr = q.reshape(b, 1, nkv, group, h)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qr, cache_k,
+                        preferred_element_type=jnp.float32) / math.sqrt(h)
+    valid = (jnp.arange(cache_k.shape[1])[None] <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, cache_v).reshape(b, 1, nh * h)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------- #
+# FFN
+# ---------------------------------------------------------------------- #
+def init_ffn(cfg: ModelConfig, key: jax.Array,
+             d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    dt = _dtype(cfg)
+    p = {
+        "w_in": (jax.random.normal(k1, (d, f)) * s).astype(dt),
+        "w_out": (jax.random.normal(k2, (f, d)) / math.sqrt(f)).astype(dt),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s).astype(dt)
+    return p
+
+
+def ffn(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.seq_parallel:
+        x = constrain(x, ("batch", "seq", "embed"))
+    h = x @ p["w_in"]
+    h = constrain(h, ("batch", "seq", "ff"))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif cfg.act == "geglu":                      # grok-1-style gated gelu
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return constrain((h @ p["w_out"]).astype(x.dtype), _res_axes(cfg))
+
+
+# ---------------------------------------------------------------------- #
+# embeddings / head
+# ---------------------------------------------------------------------- #
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to a multiple of 256 so the vocab axis divides
+    any production model-parallel degree (perf iteration 6: mamba2's
+    50280 and whisper's 51865 are indivisible by 16, which replicated
+    the full fp32 logits on every device -- the dominant HBM term).
+    Pad logits are masked to -1e30 in lm_head."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def init_embedding(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    pv = padded_vocab(cfg)
+    p = {"tok": (jax.random.normal(k1, (pv, cfg.d_model))
+                 * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(k2, (cfg.d_model, pv))
+                     * 0.02).astype(dt)
+    return p
+
+
+def embed(cfg: ModelConfig, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def lm_head(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits over the PADDED vocab (pad positions masked to -1e30 so
+    softmax/xent/argmax are exact); callers may slice [..., :vocab]."""
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = x @ w
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    pv = logits.shape[-1]
+    if pv != cfg.vocab:
+        mask = jnp.arange(pv) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token-mean cross entropy in fp32.
+
+    The gold logit is extracted with a masked reduction (not
+    take_along_axis): an elementwise compare + sum keeps the vocab axis
+    shardable under SPMD (a gather along a model-sharded vocab would
+    force XLA to all-gather the full logits).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(labels[..., None] == vocab_iota, logits, 0.0),
+                   axis=-1)
+    return jnp.mean(logz - gold)

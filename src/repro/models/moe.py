@@ -1,0 +1,300 @@
+"""Mixture-of-Experts transformer (grok-1, qwen2-moe).
+
+MoE dispatch is the framework's instantiation of TeAAL's
+*uniform-occupancy leader-follower partitioning* (DESIGN.md): the
+router output is the leader tensor; tokens (the followers) are split
+into equal-occupancy partitions per expert (capacity), and the
+expert-parallel all-to-all is the online rank swizzle
+[token, expert] -> [expert, token].
+
+Supports shared (always-on) experts (qwen2-moe: 4 shared + 60 routed
+top-4) and pure top-k routing (grok-1: 8 experts top-2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding.logical import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- #
+# expert FFN params (stacked over experts -> shard on the expert axis)
+# ---------------------------------------------------------------------- #
+def init_experts(cfg: ModelConfig, key: jax.Array, n: int,
+                 d_expert: int) -> Params:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "w_in": (jax.random.normal(k1, (n, d, d_expert)) * s).astype(dt),
+        "w_out": (jax.random.normal(k2, (n, d_expert, d))
+                  / math.sqrt(d_expert)).astype(dt),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (n, d, d_expert)) * s
+                       ).astype(dt)
+    return p
+
+
+def padded_expert_count(n_experts: int, tp: int = 16) -> int:
+    """Perf iteration 3 (REFUTED, kept for the record -- see
+    EXPERIMENTS.md SPerf): padding experts to a mesh multiple so the
+    dispatch buffers shard on the expert axis measured 4-6x WORSE than
+    capacity-axis-only sharding -- the token->buffer scatter across a
+    model-sharded expert dim forces replicated scatter operands.  The
+    shipped configuration shards the capacity axis only (iteration 2),
+    so this returns ``n_experts`` unchanged."""
+    return n_experts
+
+
+def init_moe_layer(cfg: ModelConfig, key: jax.Array) -> Params:
+    m = cfg.moe
+    d_expert = m.d_expert or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    e_pad = padded_expert_count(m.n_experts)
+    p: Params = {
+        "router": (jax.random.normal(k1, (cfg.d_model, m.n_experts))
+                   * 0.02).astype(jnp.float32),
+        "experts": init_experts(cfg, k2, e_pad, d_expert),
+    }
+    if m.n_shared:
+        p["shared"] = init_experts(cfg, k3, m.n_shared, d_expert)
+    return p
+
+
+# ---------------------------------------------------------------------- #
+# dispatch: occupancy-equalized expert capacity (leader-follower)
+# ---------------------------------------------------------------------- #
+def route(logits: jnp.ndarray, top_k: int, capacity: int
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Router logits [t, e] -> (expert_id [t*k], slot [t*k], keep [t*k],
+    gate [t*k]).
+
+    ``slot`` is each (token, k)-assignment's arrival position within its
+    expert -- the *occupancy coordinate* of TeAAL's leader-follower
+    partitioning (the router output is the leader; capacity is the
+    partition boundary; assignments past it are dropped).  O(t*e)
+    memory -- no [t, e, c] one-hot tables (those are O(t^2) at scale).
+    """
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [t, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9)
+    eid = gate_idx.reshape(t * top_k)
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.float32)      # [t*k, e]
+    pos = jnp.cumsum(onehot, axis=0) - onehot               # arrival order
+    slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # [t*k]
+    keep = slot < capacity
+    return eid, slot, keep, gate_vals.reshape(t * top_k)
+
+
+def expert_ffn(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [e, c, d] or [e, g, c, d] -> same shape, batched over experts
+    (g = dispatch groups, sharded over the data axis)."""
+    if x.ndim == 4:
+        eq_in, eq_out = "egcd,edf->egcf", "egcf,efd->egcd"
+        ax_h = ("experts", "expert_group", None, "ff")
+        ax_o = ("experts", "expert_group", None, None)
+    else:
+        eq_in, eq_out = "ecd,edf->ecf", "ecf,efd->ecd"
+        ax_h = ("experts", "expert_cap", "ff")
+        ax_o = ("experts", "expert_cap", None)
+    h = jnp.einsum(eq_in, x, p["w_in"])
+    h = constrain(h, ax_h)
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum(eq_in, x, p["w_gate"])
+        gate = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = gate * h
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum(eq_out, h, p["w_out"])
+    return constrain(out, ax_o)
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b, s, d] -> ([b, s, d], aux_loss).
+
+    Scatter/gather dispatch (O(t*k*d) memory): tokens are scattered
+    into per-expert capacity buffers at their occupancy slot, the
+    expert FFNs run batched, and outputs are gathered back and
+    gate-combined.  The token->expert-buffer scatter across the
+    batch-sharded token axis and expert/capacity-sharded buffers is the
+    expert-parallel all-to-all -- TeAAL's online rank swizzle
+    [token, expert] -> [expert, slot].
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+
+    # GROUP-LOCAL dispatch (perf iteration 8): tokens are routed within
+    # ``g`` groups aligned to the data shards, so the token->buffer
+    # scatter never crosses shards -- the cross-data partial-sum
+    # all-reduce of the [e, c, d] buffers disappears entirely (the
+    # expert weights are already all-gathered per layer by FSDP).
+    # Capacity is per group (occupancy partition per shard).
+    g = 16 if (t % 16 == 0 and t >= 16 * k) else 1
+    tg = t // g
+    capacity = max(1, int(m.capacity_factor * tg * k // e))
+    capacity = -(-capacity // 64) * 64 if capacity > 64 else capacity
+
+    lg = logits.reshape(g, tg, e)
+    eid, slot, keep, gate = jax.vmap(
+        lambda lx: route(lx, k, capacity))(lg)            # each [g, tg*k]
+
+    tok_idx = jnp.arange(tg * k, dtype=jnp.int32) // k
+    xg = xf.reshape(g, tg, d)
+    xs = xg[:, tok_idx]                                     # [g, tg*k, d]
+    xs = jnp.where(keep[..., None], xs, 0)
+    slot_c = jnp.where(keep, slot, capacity)                # drop bucket
+
+    # vmapped (BATCHED) scatter over the group dim: lowers with an
+    # operand batch dim so SPMD keeps each group's scatter local to its
+    # data shard (an explicit iota group index defeats that analysis
+    # and re-introduces a cross-shard all-reduce of the buffers)
+    def scatter_group(xs_g, eid_g, slot_g):
+        bg = jnp.zeros((e, capacity + 1, d), x.dtype)
+        return bg.at[eid_g, slot_g].add(xs_g, mode="drop")
+
+    buf = jax.vmap(scatter_group)(xs, eid, slot_c)[:, :, :capacity]
+    buf = constrain(buf, ("expert_group", "experts", None, None))
+
+    out_buf = expert_ffn(cfg, p["experts"],
+                         buf.transpose(1, 0, 2, 3))         # [e,g,c,d]
+    out_buf = out_buf.transpose(1, 0, 2, 3)                 # [g,e,c,d]
+
+    # combine: batched gather of each assignment's output
+    y = jax.vmap(lambda ob, eg, sg: ob[eg, sg])(
+        out_buf, eid, jnp.minimum(slot, capacity - 1))      # [g, tg*k, d]
+    y = y * (gate * keep).astype(y.dtype)[..., None]
+    out = jnp.sum(y.reshape(g, tg, k, d), axis=2).reshape(b, s, d)
+
+    if m.n_shared:
+        shared = expert_ffn(
+            cfg, p["shared"],
+            jnp.broadcast_to(xf[None], (m.n_shared, t, d)))
+        out = out + shared.sum(0).reshape(b, s, d)
+    # load-balance auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(eid.reshape(t * k), e, dtype=jnp.float32)
+         * keep.reshape(t * k)[:, None]).reshape(t, k, e).sum(1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+# ---------------------------------------------------------------------- #
+# model assembly: transformer with MoE FFNs
+# ---------------------------------------------------------------------- #
+def init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_rmsnorm(cfg),
+        "moe": init_moe_layer(cfg, k2),
+    }
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kl = jax.random.split(key)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_block(cfg, k))(
+            jax.random.split(kl, cfg.n_layers))
+    else:
+        blocks = [init_block(cfg, k)
+                  for k in jax.random.split(kl, cfg.n_layers)]
+    return {"embed": L.init_embedding(cfg, ke), "blocks": blocks,
+            "ln_f": L.init_rmsnorm(cfg)}
+
+
+def block_fwd(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = x + L.attention(cfg, p["attn"], L.norm(cfg, p["ln1"], x), pos)
+    y, aux = moe_ffn(cfg, p["moe"], L.norm(cfg, p["ln2"], x))
+    return x + y, aux
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = L.embed(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        def body(carry, blk):
+            y, a = carry
+            y2, aux = block_fwd(cfg, blk, y, pos)
+            return (y2, a + aux), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+    else:
+        bf = (jax.checkpoint(lambda blk, h: block_fwd(cfg, blk, h, pos))
+              if cfg.remat else (lambda blk, h: block_fwd(cfg, blk, h, pos)))
+        for blk in params["blocks"]:
+            x, aux = bf(blk, x)
+            aux_total = aux_total + aux
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x), aux_total
+
+
+def loss_fn(cfg: ModelConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    return (L.softmax_xent(logits, batch["labels"])
+            + cfg.moe.router_aux_weight * aux / cfg.n_layers)
+
+
+# ---------------------------------------------------------------------- #
+# decode
+# ---------------------------------------------------------------------- #
+init_cache = T.init_cache
+
+
+def decode_block(cfg: ModelConfig, p: Params, x, ck, cv, pos):
+    a, ck, cv = L.attention_decode(cfg, p["attn"],
+                                   L.norm(cfg, p["ln1"], x), ck, cv, pos)
+    x = x + a
+    y, _ = moe_ffn(cfg, p["moe"], L.norm(cfg, p["ln2"], x))
+    return x + y, ck, cv
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray):
+    x = L.embed(cfg, params["embed"], token[:, None])
+    if cfg.scan_layers:
+        def body(carry, inp):
+            blk, ck, cv = inp
+            y, ck, cv = decode_block(cfg, blk, carry, ck, cv, pos)
+            return y, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        cache = {"k": ks, "v": vs}
+    else:
+        ks, vs = [], []
+        for i, blk in enumerate(params["blocks"]):
+            x, ck, cv = decode_block(cfg, blk, x, cache["k"][i],
+                                     cache["v"][i], pos)
+            ks.append(ck)
+            vs.append(cv)
+        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)[:, 0], cache

@@ -1,0 +1,320 @@
+"""Mamba2 SSD (state-space duality) layers  [arXiv:2405.21060].
+
+The chunked SSD algorithm is this framework's instantiation of TeAAL's
+*cascade-of-Einsums* decomposition (DESIGN.md): like the Toeplitz
+expansion in the paper (Sec. 3.1), one monolithic recurrence
+
+    Y[b, s, h, p] = sum_t<=s C[s] (prod decay) B[t] X[t]
+
+is rewritten as a cascade over a partitioned S rank (uniform_shape
+chunks):
+
+    (1) intra-chunk:  Y_diag[c, l] = C[c, l] . L[c, l, l'] . B[c, l'] X[c, l']
+    (2) chunk states: S[c]        = sum_l decay(l) B[c, l] X[c, l]
+    (3) inter-chunk:  S'[c]       = scan over c (the carried recurrence)
+    (4) state out:    Y_off[c, l] = C[c, l] . decay . S'[c-1]
+
+Each stage is independently mappable -- stage (1) is the MXU-friendly
+quadratic block (Pallas kernel ``ssd_chunk``), stages (2-4) are the
+linear-cost recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.logical import constrain
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    """(d_inner, n_heads, head_dim, d_state, conv_dim)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state          # x, B, C all pass the conv
+    return d_in, nh, s.head_dim, s.d_state, conv_dim
+
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+def init_mamba_layer(cfg: ModelConfig, key: jax.Array) -> Params:
+    d = cfg.d_model
+    d_in, nh, p, n, conv_dim = dims(cfg)
+    s = cfg.ssm
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    proj_out = 2 * d_in + 2 * n + nh          # z, xBC, dt
+    return {
+        "w_in": (jax.random.normal(k1, (d, proj_out))
+                 / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_dim))
+                   / math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((nh,), 1e-2, jnp.float32))),   # softplus^-1(0.01)
+        "norm": jnp.ones((d_in,), dtype=jnp.float32),
+        "w_out": (jax.random.normal(k3, (d_in, d))
+                  / math.sqrt(d_in)).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# the SSD cascade (train / prefill)
+# ---------------------------------------------------------------------- #
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j<k<=i} x[k];
+    -inf above the diagonal (so exp() gives the causal decay mask)."""
+    l = x.shape[-1]
+    xx = jnp.repeat(x[..., None], l, axis=-1)          # [..., l, l]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=-1)
+    xx = jnp.where(mask, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+        chunk: int, init_state: Optional[jnp.ndarray] = None,
+        use_kernel: bool = False
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked state-space dual form.
+
+    x: [B, S, H, P] (pre-multiplied by dt); a: [B, S, H] (= A*dt, <=0);
+    b, c: [B, S, N] (single group, broadcast over heads).
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    S must be a multiple of ``chunk``.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    ac = a.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)    # [B,H,nc,l]
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                           # [B,H,nc,l]
+
+    # (1) intra-chunk (diagonal blocks) -- the quadratic, MXU-bound stage
+    if use_kernel:
+        from repro.kernels.ops import ssd_chunk
+        y_diag = ssd_chunk(xc, ac, bc, cc)
+    else:
+        Lmask = jnp.exp(_segsum(ac))                          # [B,H,nc,l,l]
+        g = jnp.einsum("bcln,bcsn->bcls", cc, bc,
+                       preferred_element_type=jnp.float32)    # [B,nc,l,s]
+        y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp",
+                            g, Lmask, xc,
+                            preferred_element_type=jnp.float32)
+
+    # (2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)           # [B,H,nc,l]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)   # [B,nc,H,P,N]
+
+    # (3) inter-chunk recurrence (the carried scan over chunks)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), states.dtype)
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # [B,H,nc]
+
+    def step(carry, inp):
+        s_c, d_c = inp                                        # [B,H,P,N],[B,H]
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry                                     # emit state *before* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [B,nc,H,P,N]
+
+    # (4) state->output conversion
+    state_decay = jnp.exp(a_cum)                              # [B,H,nc,l]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final
+
+
+def _conv1d(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+            state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal depthwise conv over time. xbc: [B, S, C]; w: [K, C].
+
+    Uses one fused lax.conv (feature_group_count=C) -- the shift-and-sum
+    form lowered to thousands of slice/multiply/add ops and was the #2
+    HBM consumer of the mamba2 step (perf iteration 7)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(xbc.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[2])
+    return jax.nn.silu(out + bias)
+
+
+def mamba_layer(cfg: ModelConfig, pr: Params, x: jnp.ndarray,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence forward.  x: [B, S, d_model]."""
+    d_in, nh, p, n, conv_dim = dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = x @ pr["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xbc = _conv1d(xbc, pr["conv_w"], pr["conv_b"])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = constrain(xs.reshape(B, S, nh, p), ("batch", "seq", "heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + pr["dt_bias"])  # [B,S,nh]
+    a = -jnp.exp(pr["A_log"]) * dt                                # [B,S,nh]
+    # perf iteration 5: the big SSD streams (x*dt, B, C) travel in the
+    # model dtype; the decay chain (a, cumsum, exp) and the einsum
+    # accumulators stay fp32 (preferred_element_type in ssd()).
+    xdt = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+
+    y, _ = ssd(xdt, a, b, c, cfg.ssm.chunk, use_kernel=use_kernel)
+    y = y + pr["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm({"scale": pr["norm"]}, y, cfg.norm_eps)
+    return (y.astype(x.dtype)) @ pr["w_out"]
+
+
+# ---------------------------------------------------------------------- #
+# single-token decode (linear recurrence)
+# ---------------------------------------------------------------------- #
+def init_layer_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    d_in, nh, p, n, conv_dim = dims(cfg)
+    ssm_state = jnp.zeros((batch, nh, p, n), jnp.float32)
+    conv_state = jnp.zeros((batch, cfg.ssm.d_conv - 1, conv_dim), dtype)
+    return ssm_state, conv_state
+
+
+def mamba_decode(cfg: ModelConfig, pr: Params, x: jnp.ndarray,
+                 ssm_state: jnp.ndarray, conv_state: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B, 1, d_model] -> (y, new_ssm_state, new_conv_state)."""
+    d_in, nh, p, n, conv_dim = dims(cfg)
+    B = x.shape[0]
+    zxbcdt = x @ pr["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xbc_out = _conv1d(xbc, pr["conv_w"], pr["conv_b"], state=conv_state)
+    new_conv = jnp.concatenate([conv_state[:, 1:], xbc], axis=1)
+    xs, b, c = jnp.split(xbc_out[:, 0], [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(B, nh, p).astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + pr["dt_bias"])
+    da = jnp.exp(-jnp.exp(pr["A_log"]) * dtv)                  # [B,nh]
+    bx = (dtv[..., None] * xs)[..., None] \
+        * b[:, None, None, :].astype(jnp.float32)              # [B,nh,p,n]
+    new_state = ssm_state * da[..., None, None] + bx
+    y = jnp.einsum("bhpn,bn->bhp", new_state,
+                   c.astype(jnp.float32)) + pr["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm({"scale": pr["norm"]}, y, cfg.norm_eps)
+    return (y.astype(x.dtype)) @ pr["w_out"], new_state, new_conv
+
+
+# ---------------------------------------------------------------------- #
+# model assembly
+# ---------------------------------------------------------------------- #
+def init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    return {"ln": L.init_rmsnorm(cfg), "mamba": init_mamba_layer(cfg, key)}
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kl = jax.random.split(key)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_block(cfg, k))(
+            jax.random.split(kl, cfg.n_layers))
+    else:
+        blocks = [init_block(cfg, k)
+                  for k in jax.random.split(kl, cfg.n_layers)]
+    return {"embed": L.init_embedding(cfg, ke), "blocks": blocks,
+            "ln_f": L.init_rmsnorm(cfg)}
+
+
+def block_fwd(cfg: ModelConfig, pr: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x + mamba_layer(cfg, pr["mamba"], L.norm(cfg, pr["ln"], x))
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray
+            ) -> jnp.ndarray:
+    x = L.embed(cfg, params["embed"], tokens)
+    if cfg.scan_layers:
+        def body(carry, blk):
+            return block_fwd(cfg, blk, carry), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        bf = (jax.checkpoint(lambda blk, h: block_fwd(cfg, blk, h))
+              if cfg.remat else (lambda blk, h: block_fwd(cfg, blk, h)))
+        for blk in params["blocks"]:
+            x = bf(blk, x)
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    d_in, nh, p, n, conv_dim = dims(cfg)
+    nl = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((nl, batch, nh, p, n), jnp.float32),
+        "conv": jnp.zeros((nl, batch, cfg.ssm.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    """SSM decode: O(1) in sequence length (no KV cache)."""
+    x = L.embed(cfg, params["embed"], token[:, None])
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            blk, ss, cs = inp
+            y, ss, cs = _decode_block(cfg, blk, carry, ss, cs)
+            return y, (ss, cs)
+        x, (ssm_s, conv_s) = jax.lax.scan(
+            body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        cache = {"ssm": ssm_s, "conv": conv_s}
+    else:
+        sss, css = [], []
+        for i, blk in enumerate(params["blocks"]):
+            x, ss, cs = _decode_block(cfg, blk, x, cache["ssm"][i],
+                                      cache["conv"][i])
+            sss.append(ss)
+            css.append(cs)
+        cache = {"ssm": jnp.stack(sss), "conv": jnp.stack(css)}
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)[:, 0], cache
+
+
+def _decode_block(cfg, blk, x, ss, cs):
+    y, ss, cs = mamba_decode(cfg, blk["mamba"], L.norm(cfg, blk["ln"], x),
+                             ss, cs)
+    return x + y, ss, cs

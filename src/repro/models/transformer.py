@@ -1,0 +1,144 @@
+"""Decoder-only GQA transformer (granite, qwen3, qwen2, olmo, llava).
+
+Layer stack is a ``jax.lax.scan`` over stacked parameters so 40-70
+layer models lower to a compact HLO at 512 devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.logical import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+def init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_rmsnorm(cfg),
+        "ffn": L.init_ffn(cfg, k2),
+    }
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kl = jax.random.split(key)
+    n = cfg.n_layers
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_block(cfg, k))(
+            jax.random.split(kl, n))
+    else:
+        blocks = [init_block(cfg, k) for k in jax.random.split(kl, n)]
+    return {
+        "embed": L.init_embedding(cfg, ke),
+        "blocks": blocks,
+        "ln_f": L.init_rmsnorm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# forward (train / prefill)
+# ---------------------------------------------------------------------- #
+def block_fwd(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              pos: jnp.ndarray) -> jnp.ndarray:
+    if cfg.seq_parallel:
+        # residual stream (and the norms) stay sequence-sharded; the
+        # blocks all-gather on entry and reduce-scatter on exit
+        x = constrain(x, ("batch", "sp", "embed"))
+    x = x + L.attention(cfg, p["attn"], L.norm(cfg, p["ln1"], x), pos)
+    x = x + L.ffn(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens [b, s] -> logits [b, s(+p), vocab].  ``extra_embeds``
+    (vlm patch stubs) are prepended to the token embeddings."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        x = constrain(x, ("batch", "seq", "embed"))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.scan_layers:
+        def body(carry, blk):
+            return block_fwd(cfg, blk, carry, pos), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        bf = (jax.checkpoint(lambda blk, h: block_fwd(cfg, blk, h, pos))
+              if cfg.remat else (lambda blk, h: block_fwd(cfg, blk, h, pos)))
+        for blk in params["blocks"]:
+            x = bf(blk, x)
+    x = L.norm(cfg, params["ln_f"], x)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["tokens"],
+                     extra_embeds=batch.get("patches"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:     # vlm: drop patch positions
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    return L.softmax_xent(logits, labels)
+
+
+# ---------------------------------------------------------------------- #
+# decode (serve_step)
+# ---------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    n, nkv, h = cfg.n_layers, cfg.n_kv_heads, cfg.hdim
+    shape = (n, batch, max_len, nkv, h)
+    return {"k": jnp.zeros(shape, dtype=dtype),
+            "v": jnp.zeros(shape, dtype=dtype)}
+
+
+def decode_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 ck: jnp.ndarray, cv: jnp.ndarray, pos: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    a, ck, cv = L.attention_decode(cfg, p["attn"],
+                                   L.norm(cfg, p["ln1"], x), ck, cv, pos)
+    x = x + a
+    x = x + L.ffn(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+    return x, ck, cv
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: token [b], pos [b] -> logits [b, vocab]."""
+    x = L.embed(cfg, params["embed"], token[:, None])
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            blk, ck, cv = inp
+            y, ck, cv = decode_block(cfg, blk, carry, ck, cv, pos)
+            return y, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"],
+                                    cache["v"]))
+        cache = {"k": ks, "v": vs}
+    else:
+        ks, vs = [], []
+        for i, blk in enumerate(params["blocks"]):
+            x, ck, cv = decode_block(cfg, blk, x, cache["k"][i],
+                                     cache["v"][i], pos)
+            ks.append(ck)
+            vs.append(cv)
+        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    x = L.norm(cfg, params["ln_f"], x)
+    logits = L.lm_head(cfg, params["embed"], x)
+    return logits[:, 0], cache

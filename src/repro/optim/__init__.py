@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adafactor, adamw, OptState, Optimizer,
+                                    clip_by_global_norm, cosine_schedule)
+
+__all__ = ["adafactor", "adamw", "OptState", "Optimizer",
+           "clip_by_global_norm", "cosine_schedule"]

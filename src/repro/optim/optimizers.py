@@ -1,0 +1,187 @@
+"""Optimizers: AdamW (fp32 states) and Adafactor (factored second
+moment, no separate master copy) -- pure-pytree implementations.
+
+Optimizer states inherit each parameter's PartitionSpec (ZeRO-style:
+states live wherever the param shard lives, so a fully-sharded param
+implies fully-sharded states).  Adafactor is selected for the >100 B
+configs (grok, jamba) where AdamW's 16 B/param states cannot fit the
+per-device HBM budget at 256 chips (napkin math in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState, jnp.ndarray],
+                     Tuple[Params, OptState]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------- #
+# gradient utilities
+# ---------------------------------------------------------------------- #
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------- #
+# AdamW
+# ---------------------------------------------------------------------- #
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            # fp32 master copy
+            "master": jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params),
+        }
+
+    def update(params, grads, state, _loss):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p_master, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            new = p_master - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                                     + weight_decay * p_master)
+            return new, m, v
+
+        flat_m, tdef = jax.tree_util.tree_flatten(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        flat_ma = jax.tree_util.tree_leaves(state["master"])
+        flat_g = jax.tree_util.tree_leaves(grads)
+        outs = [upd(pm, g, m, v)
+                for pm, g, m, v in zip(flat_ma, flat_g, flat_m, flat_v)]
+        new_master = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        new_v = tdef.unflatten([o[2] for o in outs])
+        new_params = jax.tree_util.tree_map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params)
+        return new_params, {"step": step, "m": new_m, "v": new_v,
+                            "master": new_master}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------- #
+# Adafactor (factored v, first moment optional, no master copy)
+# ---------------------------------------------------------------------- #
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        def per_param(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree_util.tree_map(per_param, params,
+                                            is_leaf=lambda x: hasattr(
+                                                x, "shape"))}
+
+    def update(params, grads, state, _loss):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+                    * vc[..., None, :])
+                u = g / jnp.maximum(denom, 1e-30)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g / jnp.sqrt(nv["v"])
+            # update clipping (Adafactor's RMS rule)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            new = pf - lr_t * (u + weight_decay * pf)
+            return new.astype(p.dtype), nv
+
+        leaves_p, tdef = jax.tree_util.tree_flatten(params)
+        leaves_g = jax.tree_util.tree_leaves(grads)
+        leaves_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v)
+                for p, g, v in zip(leaves_p, leaves_g, leaves_v)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"step": step, "v": new_v}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def for_config(cfg, base_lr: float = 3e-4, warmup: int = 2000,
+               total: int = 100_000) -> Optimizer:
+    """AdamW below ~100 B params, Adafactor above (HBM budget)."""
+    from repro.configs.base import param_count
+    sched = cosine_schedule(base_lr, warmup, total)
+    if param_count(cfg) > 1e11:
+        return adafactor(sched)
+    return adamw(sched)

@@ -1,0 +1,9 @@
+from repro.runtime.health import HeartbeatMonitor, HostState
+from repro.runtime.elastic import plan_mesh, ElasticPlan
+from repro.runtime.compression import (topk_compress, topk_decompress,
+                                       int8_quantize, int8_dequantize,
+                                       ErrorFeedback)
+
+__all__ = ["HeartbeatMonitor", "HostState", "plan_mesh", "ElasticPlan",
+           "topk_compress", "topk_decompress", "int8_quantize",
+           "int8_dequantize", "ErrorFeedback"]

@@ -1,0 +1,92 @@
+"""Gradient compression for the inter-pod (DCN) all-reduce.
+
+Two composable schemes, both pure-JAX (jit-able, SPMD-shardable):
+
+  * top-k sparsification with ERROR FEEDBACK: transmit the largest-|g|
+    k fraction; the residual is carried into the next step's gradient
+    (EF-SGD), which keeps convergence guarantees;
+  * int8 quantization with per-tensor scale (symmetric), for a further
+    4x over bf16 on the wire.
+
+At 2 pods the pod-axis gradient all-reduce is the only DCN collective;
+compressing it by ~50x (1% top-k + int8) moves the inter-pod term off
+the roofline's critical path (napkin math in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------- #
+# top-k with error feedback
+# ---------------------------------------------------------------------- #
+def topk_compress(g: jnp.ndarray, frac: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Keep the top-``frac`` fraction by |value|.
+
+    Returns (values [k], indices [k], residual g - kept)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(g.shape)
+    return kept, idx, residual.astype(g.dtype)
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray,
+                    shape, dtype=jnp.float32) -> jnp.ndarray:
+    out = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    out = out.at[idx].set(vals)
+    return out.reshape(shape).astype(dtype)
+
+
+@dataclass
+class ErrorFeedback:
+    """Carries the compression residual across steps (EF-SGD)."""
+    frac: float = 0.01
+
+    def init(self, grads: Params) -> Params:
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, g.dtype), grads)
+
+    def compress(self, grads: Params, residuals: Params
+                 ) -> Tuple[Params, Params]:
+        """-> (compressed {vals, idx} tree, new residuals)."""
+        def one(g, r):
+            vals, idx, res = topk_compress(g + r.astype(g.dtype),
+                                           self.frac)
+            return {"vals": vals, "idx": idx}, res
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        res_leaves = treedef.flatten_up_to(residuals)
+        outs = [one(g, r) for g, r in zip(leaves, res_leaves)]
+        comp = treedef.unflatten([o[0] for o in outs])
+        new_res = treedef.unflatten([o[1] for o in outs])
+        return comp, new_res
+
+    def decompress(self, comp: Params, like: Params) -> Params:
+        def one(c, g):
+            return topk_decompress(c["vals"], c["idx"], g.shape, g.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        comp_leaves = treedef.flatten_up_to(comp)
+        return treedef.unflatten(
+            [one(c, g) for c, g in zip(comp_leaves, leaves)])
+
+
+# ---------------------------------------------------------------------- #
+# int8 symmetric quantization
+# ---------------------------------------------------------------------- #
+def int8_quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

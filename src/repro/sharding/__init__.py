@@ -1,0 +1,8 @@
+"""Sharding: TeAAL-mapping-driven PartitionSpec compilation + logical axes."""
+from .logical import (AxisRules, constrain, current_mesh, default_rules,
+                      set_mesh, set_rules, spec_for)
+from .compiler import compile_mapping, mapping_spec_for_step
+
+__all__ = ["AxisRules", "constrain", "current_mesh", "default_rules",
+           "set_mesh", "set_rules", "spec_for", "compile_mapping",
+           "mapping_spec_for_step"]

@@ -1,0 +1,112 @@
+"""Logical axis names -> mesh axes, with divisibility-aware fallback.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("batch", "seq", "ff"))``); the active rule set maps
+each name to one or more mesh axes.  A mapping is applied only when the
+dimension is divisible by the mesh-axis product, so e.g. granite's
+single KV head silently stays replicated instead of failing to shard
+over the 16-way model axis.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass
+class AxisRules:
+    rules: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+
+    def axes_for(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+
+def default_rules() -> AxisRules:
+    """The production mapping: batch over (pod, data); width over model.
+
+    This is the compiled form of the TeAAL ``spacetime`` spec in
+    ``repro.sharding.compiler.mapping_spec_for_step`` -- spatial ranks
+    bind to mesh axes, temporal ranks stay local.
+    """
+    return AxisRules({
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_cap": ("data",),
+        "expert_group": ("data",),
+        "sp": ("model",),
+        "kv_seq": ("data",),          # long-context decode: shard the cache
+        "state": (),
+    })
+
+
+def set_rules(rules: Optional[AxisRules]) -> None:
+    _STATE.rules = rules
+
+
+def get_rules() -> AxisRules:
+    return getattr(_STATE, "rules", None) or default_rules()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def spec_for(shape: Sequence[int],
+             logical: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for ``shape`` under the active rules; axes that do
+    not divide are dropped (replicated)."""
+    mesh = mesh or current_mesh()
+    rules = get_rules()
+    if mesh is None:
+        return P(*([None] * len(logical)))
+    sizes = dict(mesh.shape)
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = [a for a in rules.axes_for(name)
+                if a in sizes and a not in used]
+        keep = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        used.update(keep)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the active mesh; no-op without one."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"logical axes {logical} vs shape {x.shape}")
+    spec = spec_for(x.shape, logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def sparse_matrix(rng, m, n, density=0.1):
+    return rng.random((m, n)) * (rng.random((m, n)) < density)
+
+
+@pytest.fixture
+def spmat():
+    return sparse_matrix

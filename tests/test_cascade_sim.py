@@ -1,0 +1,139 @@
+"""Integration tests: the four validated accelerator models + the
+Table-2 cascade zoo, executed on real sparse matrices and checked
+against the dense oracle (paper Sec. 7 methodology at test scale)."""
+import numpy as np
+import pytest
+
+from repro.accelerators import extensor, gamma, outerspace, sigma
+from repro.accelerators.zoo import ZOO
+from repro.core.einsum import parse_einsum, dense_reference
+from repro.core.generator import CascadeSimulator, check_against_dense
+from repro.core.cascade import fusion_blocks
+
+
+ACCELS = [
+    (outerspace, None),
+    (extensor, "DEFAULT_PARAMS"),
+    (gamma, None),
+    (sigma, None),
+]
+
+
+@pytest.mark.parametrize("mod,params_attr", ACCELS,
+                         ids=["outerspace", "extensor", "gamma", "sigma"])
+def test_accelerator_matches_dense(mod, params_attr, rng, spmat):
+    M = K = N = 48
+    a, b = spmat(rng, M, K, 0.15), spmat(rng, K, N, 0.15)
+    spec = mod.spec()
+    params = getattr(mod, params_attr) if params_attr else None
+    assert check_against_dense(spec, {"A": a, "B": b},
+                               {"m": M, "k": K, "n": N}, params=params)
+
+
+@pytest.mark.parametrize("mod,params_attr", ACCELS,
+                         ids=["outerspace", "extensor", "gamma", "sigma"])
+def test_accelerator_report_sane(mod, params_attr, rng, spmat):
+    M = K = N = 32
+    a, b = spmat(rng, M, K, 0.2), spmat(rng, K, N, 0.2)
+    spec = mod.spec()
+    params = getattr(mod, params_attr) if params_attr else None
+    sim = CascadeSimulator(spec, params=params)
+    res = sim.run({"A": a, "B": b}, {"m": M, "k": K, "n": N})
+    r = res.report
+    assert r.seconds > 0
+    assert r.dram_bytes > 0
+    assert r.energy_pj > 0
+    # traffic must at least cover reading both operands once
+    nnz = int(np.count_nonzero(a)) + int(np.count_nonzero(b))
+    assert r.dram_bytes >= nnz * 4
+
+
+def test_fusion_blocks_gamma_fused_outerspace_not(rng, spmat):
+    """Sec. 4.3: Gamma's two Einsums fuse; OuterSPACE's phases do not
+    (different topologies / spacetime prefixes)."""
+    gsim = CascadeSimulator(gamma.spec())
+    gblocks = fusion_blocks(gamma.spec(), gsim.plans)
+    assert any(len(b) >= 2 for b in gblocks), gblocks
+
+    osim = CascadeSimulator(outerspace.spec())
+    oblocks = fusion_blocks(outerspace.spec(), osim.plans)
+    assert all(len(b) == 1 for b in oblocks), oblocks
+
+
+def test_outerspace_emits_merge_work(rng, spmat):
+    """OuterSPACE's sort of the linked lists = online rank swizzle of
+    the intermediate T -> Merger action counts must be nonzero."""
+    a, b = spmat(rng, 32, 32, 0.2), spmat(rng, 32, 32, 0.2)
+    sim = CascadeSimulator(outerspace.spec())
+    res = sim.run({"A": a, "B": b}, {"m": 32, "k": 32, "n": 32})
+    acts = res.report.action_counts
+    assert acts.get("merge_elem", 0) > 0
+
+
+# ---------------------------------------------------------------------- #
+# Table 2 zoo: every cascade evaluates correctly against the oracle
+# ---------------------------------------------------------------------- #
+def _zoo_inputs(name, rng):
+    if name in ("eyeriss-conv", "toeplitz-conv"):
+        shapes = {"b": 2, "c": 3, "h": 6, "w": 6, "m": 4, "r": 3, "s": 3,
+                  "p": 4, "q": 4}
+        inputs = {
+            "I": rng.random((2, 3, 6, 6)) * (rng.random((2, 3, 6, 6)) < .5),
+            "F": rng.random((3, 4, 3, 3)),
+        }
+        return inputs, shapes
+    if name in ("tensaurus-mttkrp", "factorized-mttkrp"):
+        shapes = {"i": 5, "j": 4, "k": 3, "r": 6}
+        inputs = {
+            "T": rng.random((5, 4, 3)) * (rng.random((5, 4, 3)) < 0.4),
+            "A": rng.random((3, 6)),
+            "B": rng.random((4, 6)),
+        }
+        return inputs, shapes
+    if name == "fft-step":
+        shapes = {"u": 1, "k0": 4, "n1": 2, "v": 2}
+        inputs = {
+            "P": rng.random((1, 4, 2, 2)),
+            "X": rng.random((2, 2)),
+        }
+        return inputs, shapes
+    raise KeyError(name)
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_cascade_matches_dense(name, rng):
+    spec = ZOO[name]()
+    inputs, shapes = _zoo_inputs(name, rng)
+    sim = CascadeSimulator(spec, model=False)
+    res = sim.run(dict(inputs), shapes)
+
+    dense = {k: np.asarray(v) for k, v in inputs.items()}
+    for e in spec.einsum.expressions:
+        dense[e.output.tensor] = dense_reference(
+            e, dense, {k.upper(): v for k, v in shapes.items()})
+    for e in spec.einsum.expressions:
+        out = e.output.tensor
+        got = res.tensors[out].to_dense()
+        want = dense[out]
+        # stored rank order may differ from declaration
+        decl = spec.einsum.declaration[out]
+        order = spec.mapping.rank_order.get(out, decl)
+        perm = [decl.index(r) for r in order]
+        want = np.transpose(want, perm)
+        got_pad = np.zeros(want.shape)
+        slc = tuple(slice(0, s) for s in got.shape)
+        got_pad[slc] = got
+        assert np.allclose(got_pad, want), f"{name}:{out}"
+
+
+def test_toeplitz_equals_direct_conv(rng):
+    """Sec. 3.1: the Toeplitz cascade computes the same O as direct
+    convolution -- the defining example of cascade equivalence."""
+    direct = ZOO["eyeriss-conv"]()
+    toep = ZOO["toeplitz-conv"]()
+    inputs, shapes = _zoo_inputs("eyeriss-conv", rng)
+    o1 = CascadeSimulator(direct, model=False).run(
+        dict(inputs), shapes).tensors["O"].to_dense()
+    o2 = CascadeSimulator(toep, model=False).run(
+        dict(inputs), shapes).tensors["O"].to_dense()
+    assert np.allclose(o1, o2)

@@ -1,0 +1,107 @@
+"""Einsum parser + dense oracle tests (paper Sec. 2.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.einsum import (BinOp, Einsum, Literal, Semiring, Take,
+                               TensorAccess, dense_reference, parse_einsum)
+
+
+# ---------------------------------------------------------------------- #
+# parser
+# ---------------------------------------------------------------------- #
+def test_parse_matmul():
+    e = parse_einsum("Z[m, n] = A[m, k] * B[k, n]")
+    assert e.output.tensor == "Z"
+    assert e.out_vars == ("m", "n")
+    assert e.reduced_vars == ("k",)
+    assert e.input_names == ["A", "B"]
+
+
+def test_parse_take():
+    e = parse_einsum("T[k, m, n] = take(A[k, m], B[k, n], 1)")
+    assert isinstance(e.expr, Take)
+    assert e.expr.which == 1
+    assert [a.tensor for a in e.inputs] == ["A", "B"]
+
+
+def test_parse_affine_conv():
+    e = parse_einsum("O[q] = I[q + s] * F[s]")
+    acc = e.inputs[0]
+    assert acc.tensor == "I"
+    idx = acc.indices[0]
+    assert sorted(idx.vars) == ["q", "s"]
+
+
+def test_parse_bare_copy():
+    e = parse_einsum("P1 = P0")
+    assert e.output.indices == ()
+    assert isinstance(e.expr, TensorAccess)
+
+
+def test_parse_sub_and_plus():
+    e = parse_einsum("Y1[k0] = E[0, k0] - T[k0]")
+    assert isinstance(e.expr, BinOp) and e.expr.op == "-"
+    const_idx = e.inputs[0].indices[0]
+    assert const_idx.terms == () and const_idx.const == 0
+
+
+def test_parse_error():
+    with pytest.raises(SyntaxError):
+        parse_einsum("Z[m] = A[m } * B")
+
+
+# ---------------------------------------------------------------------- #
+# dense oracle vs numpy
+# ---------------------------------------------------------------------- #
+def test_dense_matmul_oracle(rng, spmat):
+    a, b = spmat(rng, 6, 5), spmat(rng, 5, 7)
+    e = parse_einsum("Z[m, n] = A[m, k] * B[k, n]")
+    got = dense_reference(e, {"A": a, "B": b}, {"M": 6, "K": 5, "N": 7})
+    assert np.allclose(got, a @ b)
+
+
+def test_dense_conv_oracle(rng):
+    i = rng.random(10)
+    f = rng.random(3)
+    e = parse_einsum("O[q] = I[q + s] * F[s]")
+    got = dense_reference(e, {"I": i, "F": f}, {"Q": 8, "S": 3})
+    want = np.array([sum(i[q + s] * f[s] for s in range(3))
+                     for q in range(8)])
+    assert np.allclose(got, want)
+
+
+def test_dense_take_oracle(rng, spmat):
+    a, b = spmat(rng, 4, 3, 0.5), spmat(rng, 3, 5, 0.5)
+    e = parse_einsum("T[k, m, n] = take(A[k, m], B[k, n], 1)")
+    got = dense_reference(e, {"A": a.T, "B": b},
+                          {"K": 3, "M": 4, "N": 5})
+    for k in range(3):
+        for m in range(4):
+            for n in range(5):
+                want = b[k, n] if (a.T[k, m] != 0 and b[k, n] != 0) else 0
+                assert got[k, m, n] == want
+
+
+def test_min_plus_semiring():
+    # one SSSP relaxation: dist'[d] = min_s (G[d,s] + dist[s])
+    g = np.array([[0, 3.0], [2.0, 0]])
+    dist = np.array([1.0, 5.0])
+    e = parse_einsum("R[d] = G[d, s] * A[s]")
+    got = dense_reference(e, {"G": g, "A": dist}, {"D": 2, "S": 2},
+                          Semiring.min_plus())
+    assert got[0] == 5.0 + 3.0          # via s=1
+    assert got[1] == 1.0 + 2.0          # via s=0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 5),
+       k=st.integers(1, 5), n=st.integers(1, 5))
+def test_property_matmul_matches_numpy(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    a = rng.random((m, k)) * (rng.random((m, k)) < 0.5)
+    b = rng.random((k, n)) * (rng.random((k, n)) < 0.5)
+    e = parse_einsum("Z[m, n] = A[m, k] * B[k, n]")
+    got = dense_reference(e, {"A": a, "B": b},
+                          {"M": m, "K": k, "N": n})
+    assert np.allclose(got, a @ b)

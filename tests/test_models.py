@@ -1,0 +1,195 @@
+"""Per-architecture smoke tests (REDUCED same-family configs, one
+forward/train step + one decode step on CPU, shapes + no NaNs) plus
+family-specific consistency checks."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import api, encdec, layers as L, moe as MOE, ssm as SSM
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_train_and_decode(arch):
+    cfg = C.get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = api.init(cfg, key)
+    batch = api.make_batch(cfg, key, 2, 16)
+
+    loss = api.loss_fn(cfg, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+    cache = api.init_cache(cfg, 2, 32)
+    if cfg.family == "encdec":
+        cache = encdec.prime_cache(cfg, params, cache, batch["frames"])
+    logits, cache2 = api.serve_step(
+        cfg, params, cache, jnp.zeros((2,), jnp.int32),
+        jnp.zeros((2,), jnp.int32))
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(cache2))
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_full_config_matches_brief(arch):
+    """The full (non-smoke) configs carry the exact assigned dims."""
+    cfg = C.get(arch)
+    expected = {
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_moe_expert_counts():
+    grok = C.get("grok-1-314b")
+    assert (grok.moe.n_experts, grok.moe.top_k) == (8, 2)
+    q = C.get("qwen2-moe-a2.7b")
+    assert (q.moe.n_experts, q.moe.top_k, q.moe.n_shared) == (60, 4, 4)
+    j = C.get("jamba-1.5-large-398b")
+    assert (j.moe.n_experts, j.moe.top_k) == (16, 2)
+    assert j.hybrid_block == 8
+    m = C.get("mamba2-1.3b")
+    assert m.ssm.d_state == 128
+
+
+# ---------------------------------------------------------------------- #
+# SSD consistency: chunked prefill == token-by-token recurrence
+# ---------------------------------------------------------------------- #
+def test_ssd_prefill_matches_decode():
+    cfg = C.get_smoke("mamba2-1.3b")
+    key = jax.random.PRNGKey(0)
+    pr = SSM.init_mamba_layer(cfg, key)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.1
+
+    full = SSM.mamba_layer(cfg, pr, x)             # chunked SSD
+
+    ss, cs = SSM.init_layer_cache(cfg, B)
+    outs = []
+    for t in range(S):
+        y, ss, cs = SSM.mamba_decode(cfg, pr, x[:, t:t + 1], ss, cs)
+        outs.append(y)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_transformer_prefill_matches_decode():
+    """Dense GQA: forward logits at position t == decode-step logits."""
+    cfg = dataclasses.replace(C.get_smoke("qwen2-7b"), attn_chunk=None)
+    from repro.models import transformer as T
+    key = jax.random.PRNGKey(0)
+    params = api.init(cfg, key)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    full_logits = T.forward(cfg, params, toks)     # [B, S, V]
+
+    cache = api.init_cache(cfg, B, S + 1, dtype=jnp.float32)
+    for t in range(S):
+        logits, cache = api.serve_step(cfg, params, cache, toks[:, t],
+                                       jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------- #
+# MoE dispatch invariants
+# ---------------------------------------------------------------------- #
+def test_moe_route_capacity_and_positions():
+    rng = np.random.default_rng(0)
+    t, e, k, cap = 64, 4, 2, 16
+    logits = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    eid, slot, keep, gate = MOE.route(logits, k, cap)
+    eid, slot, keep = (np.asarray(eid), np.asarray(slot),
+                       np.asarray(keep))
+    # every kept (expert, slot) pair unique; slots < capacity
+    pairs = set()
+    for i in range(t * k):
+        if keep[i]:
+            assert slot[i] < cap
+            assert (eid[i], slot[i]) not in pairs
+            pairs.add((eid[i], slot[i]))
+    # gates positive, normalized per token
+    g = np.asarray(gate).reshape(t, k)
+    assert np.allclose(g.sum(-1), 1.0, atol=1e-5)
+
+
+def test_moe_ffn_matches_manual_expert_apply():
+    """With capacity ample and top-1 routing, moe_ffn equals applying
+    each token's argmax expert directly."""
+    cfg = C.get_smoke("grok-1-314b")
+    m = dataclasses.replace(cfg.moe, top_k=1, capacity_factor=8.0)
+    cfg = dataclasses.replace(cfg, moe=m)
+    key = jax.random.PRNGKey(0)
+    p = MOE.init_moe_layer(cfg, key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model),
+                          jnp.float32) * 0.1
+    out, _aux = MOE.moe_ffn(cfg, p, x)
+
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    eids = np.asarray(jnp.argmax(logits, -1))
+    de = cfg.moe.d_expert
+    for t in range(8):
+        e = int(eids[t])
+        xt = x[0, t]
+        h = xt @ p["experts"]["w_in"][e]
+        if cfg.act in ("swiglu", "geglu"):
+            g = xt @ p["experts"]["w_gate"][e]
+            gate = jax.nn.silu(g) if cfg.act == "swiglu" \
+                else jax.nn.gelu(g)
+            h = gate * h
+        else:
+            h = jax.nn.gelu(h)
+        want = h @ p["experts"]["w_out"][e]
+        np.testing.assert_allclose(np.asarray(out[0, t]),
+                                   np.asarray(want), rtol=2e-2,
+                                   atol=2e-2)
+
+
+# ---------------------------------------------------------------------- #
+# chunked attention == unchunked (ragged tail covered)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("s,chunk", [(64, 16), (50, 16), (33, 32)])
+def test_chunked_attention_equivalence(s, chunk):
+    cfg = dataclasses.replace(C.get_smoke("qwen3-14b"), attn_chunk=chunk)
+    cfg_u = dataclasses.replace(cfg, attn_chunk=None)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, nh, nkv, h = 2, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, nh, h), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, nkv, h), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, nkv, h), jnp.float32)
+    for causal in (True, False):
+        a = L.mha(cfg, q, k, v, causal=causal)
+        bu = L.mha(cfg_u, q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bu),
+                                   atol=2e-5)
+
+
+def test_param_count_scales():
+    """param_count sanity: the published sizes are the right order."""
+    from repro.configs.base import param_count
+    assert 0.8e9 < param_count(C.get("olmo-1b")) < 2.5e9
+    assert 250e9 < param_count(C.get("grok-1-314b")) < 400e9
+    assert 300e9 < param_count(C.get("jamba-1.5-large-398b")) < 500e9
+    assert 10e9 < param_count(C.get("qwen3-14b")) < 18e9

@@ -1,0 +1,262 @@
+"""Runtime substrate: data determinism, checkpoint atomicity/restore,
+optimizers, health/straggler decisions, elastic planning, gradient
+compression (property: EF residual + transmitted == original)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, save_checkpoint
+from repro.data import DataConfig, ShardedSyntheticDataset
+from repro.optim import optimizers as opt
+from repro.runtime import (ElasticPlan, ErrorFeedback, HeartbeatMonitor,
+                           int8_dequantize, int8_quantize, plan_mesh,
+                           topk_compress, topk_decompress)
+from repro.runtime.health import HostState
+
+
+# ---------------------------------------------------------------------- #
+# data pipeline
+# ---------------------------------------------------------------------- #
+def _dcfg(**kw):
+    base = dict(vocab=100, seq_len=16, global_batch=8, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_data_deterministic():
+    d1 = ShardedSyntheticDataset(_dcfg())
+    d2 = ShardedSyntheticDataset(_dcfg())
+    b1 = d1.global_batch_at(7)
+    b2 = d2.global_batch_at(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"], b2["labels"])
+
+
+def test_data_labels_shifted():
+    d = ShardedSyntheticDataset(_dcfg())
+    b = d.global_batch_at(0)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_host_sharding_consistent():
+    """Two hosts' shards concatenate to the global batch (elastic
+    contract: sharding by global example index)."""
+    d = ShardedSyntheticDataset(_dcfg())
+    full = d.global_batch_at(5)["tokens"]
+    h0 = d.batch_slice(5, 0, 4)["tokens"]
+    h1 = d.batch_slice(5, 4, 8)["tokens"]
+    assert np.array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_data_resume_mid_stream():
+    d = ShardedSyntheticDataset(_dcfg())
+    it = d.iterate(start_step=9, host_id=1, n_hosts=2)
+    got = next(it)["tokens"]
+    want = d.batch_slice(9, 4, 8)["tokens"]
+    assert np.array_equal(got, want)
+
+
+def test_data_steps_differ():
+    d = ShardedSyntheticDataset(_dcfg())
+    assert not np.array_equal(d.global_batch_at(0)["tokens"],
+                              d.global_batch_at(1)["tokens"])
+
+
+# ---------------------------------------------------------------------- #
+# checkpointing
+# ---------------------------------------------------------------------- #
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "b": {"x": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 3, tree)
+    mgr = CheckpointManager(tmp_path)
+    got, step = mgr.restore(like=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(got["b"]["x"]),
+                                  np.asarray(tree["b"]["x"]))
+
+
+def test_checkpoint_atomic_no_partial_visible(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_step() is None
+    # a stale .tmp dir must never be listed as a checkpoint
+    (tmp_path / "step_000000007.tmp").mkdir()
+    assert mgr.steps() == []
+    save_checkpoint(tmp_path, 8, _tree())
+    assert mgr.latest_step() == 8
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(11, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 11
+
+
+def test_checkpoint_resharded_restore(tmp_path):
+    """Restore onto explicit shardings (elastic path on 1 device)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = _tree()
+    save_checkpoint(tmp_path, 2, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P(None, None)),
+          "b": {"x": NamedSharding(mesh, P(None))}}
+    mgr = CheckpointManager(tmp_path)
+    got, step = mgr.restore(like=tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------- #
+# optimizers
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("make", [
+    lambda: opt.adamw(1e-1), lambda: opt.adafactor(5e-1)],
+    ids=["adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(make):
+    optimizer = make()
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = optimizer.init(params)
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}          # d/dx ||x||^2
+        params, state = optimizer.update(params, grads, state, None)
+    assert float(jnp.sum(params["x"] ** 2)) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+
+def test_cosine_schedule_shape():
+    lr = opt.cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_for_config_selects_by_size():
+    import repro.configs as C
+    assert opt.for_config(C.get("olmo-1b")).name == "adamw"
+    assert opt.for_config(C.get("grok-1-314b")).name == "adafactor"
+    assert opt.for_config(C.get("jamba-1.5-large-398b")).name == \
+        "adafactor"
+
+
+# ---------------------------------------------------------------------- #
+# health / straggler
+# ---------------------------------------------------------------------- #
+def test_heartbeat_dead_detection():
+    mon = HeartbeatMonitor(n_hosts=4, dead_after_s=10.0)
+    now = 1000.0
+    for h in range(4):
+        mon.heartbeat(h, step=1, step_latency_s=1.0, now=now)
+    mon.heartbeat(0, 2, 1.0, now=now + 5)
+    mon.heartbeat(1, 2, 1.0, now=now + 5)
+    mon.heartbeat(2, 2, 1.0, now=now + 5)
+    # host 3 last seen at t=1000; at t=1012 it is >10 s stale while the
+    # others (t=1005) are only 7 s stale
+    d = mon.evaluate(now=now + 12)
+    assert d.dead == [3]
+    assert d.should_resize
+    assert d.healthy_count == 3
+
+
+def test_straggler_needs_patience():
+    mon = HeartbeatMonitor(n_hosts=4, straggler_factor=2.0,
+                           straggler_patience=3)
+    now = 0.0
+    for rep in range(4):
+        for h in range(4):
+            lat = 10.0 if h == 2 else 1.0
+            mon.heartbeat(h, rep, lat, now=now)
+        d = mon.evaluate(now=now)
+        now += 1.0
+    assert 2 in d.stragglers
+    assert mon.hosts[2].state == HostState.STRAGGLER
+    assert mon.hosts[0].state == HostState.HEALTHY
+
+
+# ---------------------------------------------------------------------- #
+# elastic planning
+# ---------------------------------------------------------------------- #
+def test_plan_mesh_full_fleet():
+    p = plan_mesh(512, tp=16, chips_per_pod=256)
+    assert (p.pods, p.dp, p.tp) == (2, 16, 16)
+    assert p.used_chips == 512 and p.idle_chips == 0
+
+
+def test_plan_mesh_lost_hosts():
+    # lose 40 chips from one pod: dp shrinks to the next power of two
+    p = plan_mesh(512 - 40, tp=16, chips_per_pod=256)
+    assert p.tp == 16
+    assert p.used_chips <= 472
+    assert p.dp in (8, 16)
+
+
+def test_plan_mesh_scale_factor():
+    old = plan_mesh(512, tp=16)
+    new = plan_mesh(256, tp=16, old_plan=old)
+    assert new.global_batch_scale == pytest.approx(
+        (new.dp * new.pods) / (old.dp * old.pods))
+
+
+# ---------------------------------------------------------------------- #
+# gradient compression
+# ---------------------------------------------------------------------- #
+def test_topk_roundtrip_identity():
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(100),
+                    jnp.float32)
+    vals, idx, residual = topk_compress(g, 0.1)
+    rebuilt = topk_decompress(vals, idx, g.shape) + residual
+    np.testing.assert_allclose(np.asarray(rebuilt), np.asarray(g),
+                               atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.01, 0.1, 0.5]))
+def test_property_error_feedback_conserves_mass(seed, frac):
+    """transmitted + residual == grads + old residual (nothing lost)."""
+    rng = np.random.default_rng(seed)
+    grads = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+    ef = ErrorFeedback(frac=frac)
+    res = ef.init(grads)
+    comp, new_res = ef.compress(grads, res)
+    sent = ef.decompress(comp, grads)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + new_res["w"]),
+        np.asarray(grads["w"] + res["w"]), atol=1e-5)
+
+
+def test_int8_quantization_error_bounded():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(1000),
+                    jnp.float32)
+    q, scale = int8_quantize(g)
+    back = int8_dequantize(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-6

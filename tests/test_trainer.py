@@ -1,0 +1,80 @@
+"""End-to-end trainer behaviour: loss goes down, checkpoint/restart
+resumes the exact stream, crash recovery restores and continues."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp_path, arch="olmo-1b", steps=8, every=4):
+    cfg = C.get_smoke(arch)
+    tcfg = TrainerConfig(total_steps=steps, checkpoint_every=every,
+                         checkpoint_dir=str(tmp_path), log_every=1,
+                         seq_len=32, global_batch=4,
+                         async_checkpoint=False)
+    return Trainer(cfg, tcfg)
+
+
+def test_train_runs_and_checkpoints(tmp_path):
+    tr = _trainer(tmp_path, steps=6, every=3)
+    state = tr.train()
+    assert state.step == 6
+    assert tr.ckpt.latest_step() == 6
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert all(np.isfinite(losses))
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    tr1 = _trainer(tmp_path, steps=4, every=2)
+    s1 = tr1.train()
+    assert s1.step == 4
+
+    # continue to 8 in a fresh Trainer (simulated process restart)
+    tr2 = _trainer(tmp_path, steps=8, every=2)
+    s2 = tr2.train()
+    assert s2.step == 8
+    # it resumed, not restarted: first logged step is past 4
+    assert tr2.metrics_log[0]["step"] > 4
+
+
+def test_resume_bitwise_matches_uninterrupted(tmp_path):
+    """Checkpoint/restore mid-run reproduces the uninterrupted loss."""
+    straight = _trainer(tmp_path / "a", steps=6, every=6)
+    s_state = straight.train()
+    ref_loss = straight.metrics_log[-1]["loss"]
+
+    part1 = _trainer(tmp_path / "b", steps=3, every=3)
+    part1.train()
+    part2 = _trainer(tmp_path / "b", steps=6, every=3)
+    part2.train()
+    got_loss = part2.metrics_log[-1]["loss"]
+    assert got_loss == pytest.approx(ref_loss, rel=1e-4)
+
+
+def test_recovery_restores_after_failure(tmp_path):
+    tr = _trainer(tmp_path, steps=6, every=2)
+    state = tr.train()
+
+    # poison the params and run with recovery: it must reload the
+    # checkpoint rather than propagate NaNs
+    calls = {"n": 0}
+    orig_restore = tr.restore_or_init
+
+    def sabotage():
+        st = orig_restore()
+        if calls["n"] == 0:
+            calls["n"] += 1
+            bad = jax.tree_util.tree_map(
+                lambda x: jnp.full_like(x, jnp.nan), st.params)
+            st.params = bad
+        return st
+
+    tr.tcfg.total_steps = 8
+    tr.restore_or_init = sabotage
+    final = tr.run_with_recovery(max_restarts=2)
+    assert final.step == 8
+    assert calls["n"] == 1
