@@ -1,6 +1,11 @@
 """Pallas kernel micro-bench: interpret-mode correctness latency vs the
 jnp reference (CPU container; TPU wall-clock is out of scope -- the
-roofline table carries the performance story)."""
+roofline table carries the performance story).
+
+``backend`` additionally drives a small SpMSpM loop nest through the
+selected execution backend (python | vector), so the offset-keyed
+co-iteration primitives (intersect_keys / union_keys) are exercised on
+their real call path."""
 from __future__ import annotations
 
 import time
@@ -24,7 +29,7 @@ def _t(fn, *args, reps=3) -> Tuple[float, object]:
     return (time.time() - t0) / reps * 1e6, out
 
 
-def run() -> List[Tuple[str, float, float]]:
+def run(backend: str = "vector") -> List[Tuple[str, float, float]]:
     rows = []
     rng = np.random.default_rng(0)
 
@@ -72,4 +77,38 @@ def run() -> List[Tuple[str, float, float]]:
     err = float(jnp.max(jnp.abs(
         got - ref.intersect_sorted_ref(ac, bc))))
     rows.append(("kernels/intersect_sorted/interpret", us, err))
+
+    # sorted-union / merge-path kernel (interpret) vs numpy merge
+    am = ops.pad_sorted(np.sort(rng.choice(50000, 1500,
+                                           replace=False)).astype(np.int32),
+                        256)
+    bm = ops.pad_sorted(np.sort(rng.choice(50000, 2500,
+                                           replace=False)).astype(np.int32),
+                        256)
+    interpret = jax.default_backend() != "tpu"
+    us, (merged, _src) = _t(
+        lambda a_, b_: ops.merge_sorted(a_, b_, block=256,
+                                        interpret=interpret),
+        jnp.asarray(am), jnp.asarray(bm))
+    want = np.sort(np.concatenate([am, bm]))
+    err = float(np.max(np.abs(np.asarray(merged) - want)))
+    rows.append(("kernels/merge_sorted/interpret", us, err))
+
+    # execution-backend co-iteration micro-bench (real call path of the
+    # intersect/union primitives)
+    from repro.core.generator import CascadeSimulator
+    from repro.core.trace import CollectingInstr
+    from repro.accelerators.zoo import rowwise_spmspm
+    n = 256
+    a = rng.random((n, n)) * (rng.random((n, n)) < 0.05)
+    b = rng.random((n, n)) * (rng.random((n, n)) < 0.05)
+    ci = CollectingInstr()
+    sim = CascadeSimulator(rowwise_spmspm(), model=False, extra_instr=ci,
+                           backend=backend)
+    t0 = time.time()
+    sim.run({"A": a, "B": b}, {"m": n, "k": n, "n": n})
+    dt = time.time() - t0
+    muls = int(ci.compute_counts[("Z", "mul")])
+    rows.append((f"kernels/spmspm_coiter/{backend}", dt * 1e6,
+                 round(muls / max(dt, 1e-9), 1)))
     return rows

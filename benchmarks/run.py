@@ -1,15 +1,22 @@
 """Benchmark harness -- one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13]
+                                           [--backend python|vector]
+                                           [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the host
 wall time of the modeled run where meaningful; ``derived`` is the
 figure's metric: normalized traffic, modeled seconds, speedup, error %,
 or a 1.0/0.0 claim check).
+
+``--backend`` selects the execution engine for benchmarks that thread
+it through (backend, kernels, table2); ``--smoke`` runs the fast
+functional subset used by CI.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -23,7 +30,10 @@ BENCHES = {
     "table2": "benchmarks.table2_zoo",
     "kernels": "benchmarks.kernels_bench",
     "roofline": "benchmarks.roofline_lm",
+    "backend": "benchmarks.backend_throughput",
 }
+
+SMOKE_BENCHES = ["backend"]
 
 
 def main() -> None:
@@ -31,8 +41,19 @@ def main() -> None:
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset of: "
                     + ",".join(BENCHES))
+    ap.add_argument("--backend", type=str, default=None,
+                    choices=["python", "vector", "both"],
+                    help="execution backend for benchmarks that "
+                    "support selection")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast functional subset (CI)")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    if args.only:
+        names = args.only.split(",")
+    elif args.smoke:
+        names = list(SMOKE_BENCHES)
+    else:
+        names = list(BENCHES)
 
     print("name,us_per_call,derived")
     failures = 0
@@ -41,7 +62,17 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            rows = mod.run()
+            kwargs = {}
+            params = inspect.signature(mod.run).parameters
+            if args.backend is not None and "backend" in params:
+                # 'both' is a harness-level concept only the throughput
+                # bench understands; single-backend benches keep their
+                # default rather than receiving an invalid selection
+                if args.backend != "both" or name == "backend":
+                    kwargs["backend"] = args.backend
+            if args.smoke and "smoke" in params:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
             for rname, us, derived in rows:
                 print(f"{rname},{us:.1f},{derived}")
             print(f"# {name} done in {time.time() - t0:.1f}s",

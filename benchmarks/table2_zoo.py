@@ -29,10 +29,15 @@ def _inputs(name, rng):
         shapes = {"u": 1, "k0": 4, "n1": 2, "v": 2}
         return {"P": rng.random((1, 4, 2, 2)),
                 "X": rng.random((2, 2))}, shapes
+    if name in ("rowwise-spmspm", "sparse-add"):
+        shapes = {"m": 24, "k": 24, "n": 24}
+        return {"A": rng.random((24, 24)) * (rng.random((24, 24)) < 0.2),
+                "B": rng.random((24, 24)) *
+                (rng.random((24, 24)) < 0.2)}, shapes
     raise KeyError(name)
 
 
-def run() -> List[Tuple[str, float, float]]:
+def run(backend: str = None) -> List[Tuple[str, float, float]]:
     rows = []
     all_ok = True
     for name in sorted(ZOO):
@@ -40,7 +45,7 @@ def run() -> List[Tuple[str, float, float]]:
         spec = ZOO[name]()
         inputs, shapes = _inputs(name, rng)
         t0 = time.time()
-        sim = CascadeSimulator(spec, model=False)
+        sim = CascadeSimulator(spec, model=False, backend=backend)
         res = sim.run(dict(inputs), shapes)
         us = (time.time() - t0) * 1e6
 

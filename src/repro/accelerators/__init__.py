@@ -2,8 +2,13 @@
 
 Each module exposes ``spec(**params) -> AcceleratorSpec`` mirroring the
 published design (Figures 3, 8, 12; hardware parameters from Table 5),
-plus the Table 2 cascade zoo in ``zoo``.
+plus the Table 2 cascade zoo in ``zoo``.  Every module also exposes
+``simulate(inputs, var_shapes, ..., backend=...)`` threading the
+pluggable execution backend ('python' | 'vector', see
+repro.core.iteration.ExecutorBackend) through to the simulator.
 """
+from typing import Any, Dict, Optional
+
 from . import (extensor, gamma, graphicionado, matraptor, outerspace,
                sigma, zoo)
 
@@ -18,5 +23,37 @@ REGISTRY = {
     "ours-vcp": graphicionado.improved_spec,
 }
 
-__all__ = ["REGISTRY", "extensor", "gamma", "graphicionado", "matraptor",
-           "outerspace", "sigma", "zoo"]
+#: per-design partition-size defaults needed to resolve symbolic mappings
+DEFAULT_PARAMS: Dict[str, Optional[Dict[str, int]]] = {
+    "extensor": extensor.DEFAULT_PARAMS,
+}
+
+
+def simulate(design: "str | Any", inputs: Dict[str, Any],
+             var_shapes: Dict[str, int],
+             params: Optional[Dict[str, int]] = None,
+             backend: "str | None" = None,
+             model: bool = True, semiring=None, **spec_kw):
+    """One-call entry point: run a design (REGISTRY name or an
+    AcceleratorSpec) on real tensors with the selected execution
+    backend; returns the SimResult."""
+    from repro.core.generator import CascadeSimulator
+
+    if isinstance(design, str):
+        spec = REGISTRY[design](**spec_kw)
+        if params is None:
+            params = DEFAULT_PARAMS.get(design)
+    else:
+        if spec_kw:
+            raise TypeError(
+                "spec factory kwargs "
+                f"{sorted(spec_kw)} require a registry name, not an "
+                "already-built AcceleratorSpec")
+        spec = design
+    sim = CascadeSimulator(spec, params=params, semiring=semiring,
+                           model=model, backend=backend)
+    return sim.run(dict(inputs), var_shapes)
+
+
+__all__ = ["REGISTRY", "DEFAULT_PARAMS", "simulate", "extensor", "gamma",
+           "graphicionado", "matraptor", "outerspace", "sigma", "zoo"]

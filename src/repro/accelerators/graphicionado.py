@@ -283,3 +283,15 @@ def improved_spec(weighted: bool = True,
         },
     }
     return load_spec(d)
+
+def simulate(inputs, var_shapes, variant: str = "graphicionado",
+             params=None, backend=None, model=True, semiring=None,
+             **spec_kw):
+    """Run one of the graph-accelerator variants; delegates to
+    repro.accelerators.simulate (``backend`` selects the execution
+    engine: 'python' oracle | 'vector' columnar CSF)."""
+    from repro.accelerators import simulate as _simulate
+
+    return _simulate(variant, inputs, var_shapes, params=params,
+                     backend=backend, model=model, semiring=semiring,
+                     **spec_kw)

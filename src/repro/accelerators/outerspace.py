@@ -170,3 +170,14 @@ def spec(mult_batch: int = 256, mult_grp: int = 16,
         },
     }
     return load_spec(d)
+
+def simulate(inputs, var_shapes, params=None, backend=None,
+             model=True, semiring=None, **spec_kw):
+    """Run this design on real tensors; delegates to
+    repro.accelerators.simulate (``backend`` selects the execution
+    engine: 'python' oracle | 'vector' columnar CSF)."""
+    from repro.accelerators import simulate as _simulate
+
+    return _simulate("outerspace", inputs, var_shapes, params=params,
+                     backend=backend, model=model, semiring=semiring,
+                     **spec_kw)

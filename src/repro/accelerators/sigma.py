@@ -160,3 +160,14 @@ def spec(k_tile: int = 128, stationary: int = N_PES,
         },
     }
     return load_spec(d)
+
+def simulate(inputs, var_shapes, params=None, backend=None,
+             model=True, semiring=None, **spec_kw):
+    """Run this design on real tensors; delegates to
+    repro.accelerators.simulate (``backend`` selects the execution
+    engine: 'python' oracle | 'vector' columnar CSF)."""
+    from repro.accelerators import simulate as _simulate
+
+    return _simulate("sigma", inputs, var_shapes, params=params,
+                     backend=backend, model=model, semiring=semiring,
+                     **spec_kw)

@@ -122,10 +122,49 @@ def cooley_tukey_step() -> AcceleratorSpec:
     })
 
 
+def rowwise_spmspm() -> AcceleratorSpec:
+    """Unpartitioned Gustavson SpMSpM: the canonical workload of the
+    vectorized (CSF) execution backend -- every rank co-iterates, so
+    the whole loop nest runs on the columnar fast path."""
+    return load_spec({
+        "name": "Rowwise-SpMSpM",
+        "einsum": {
+            "declaration": {
+                "A": ["M", "K"],
+                "B": ["K", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m, k] * B[k, n]"],
+        },
+        "mapping": {
+            "loop-order": {"Z": ["M", "K", "N"]},
+        },
+    })
+
+
+def sparse_add() -> AcceleratorSpec:
+    """Elementwise sparse addition: exercises union (merge) co-iteration
+    in both backends (the sorted-union kernel on the vector path)."""
+    return load_spec({
+        "name": "Sparse-Add",
+        "einsum": {
+            "declaration": {
+                "A": ["M", "N"],
+                "B": ["M", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m, n] + B[m, n]"],
+        },
+        "mapping": {},
+    })
+
+
 ZOO: Dict[str, Any] = {
     "eyeriss-conv": eyeriss_conv,
     "toeplitz-conv": toeplitz_conv,
     "tensaurus-mttkrp": tensaurus_mttkrp,
     "factorized-mttkrp": factorized_mttkrp,
     "fft-step": cooley_tukey_step,
+    "rowwise-spmspm": rowwise_spmspm,
+    "sparse-add": sparse_add,
 }

@@ -4,18 +4,24 @@ Public API:
     load_spec          -- YAML-shaped dict -> AcceleratorSpec
     CascadeSimulator   -- spec + real tensors -> outputs + Report
     FTensor / Fiber    -- the fibertree abstraction
+    CSF                -- columnar compressed-sparse-fiber arrays
+    ExecutorBackend    -- pluggable execution engines (python | vector)
     Semiring           -- redefinable (+, *) for graph algorithms
 """
+from .csf import CSF
 from .einsum import Einsum, Semiring, dense_reference, parse_einsum
 from .fibertree import Fiber, FTensor
 from .generator import CascadeSimulator, SimResult, check_against_dense
+from .iteration import ExecutorBackend, PythonBackend, get_backend
 from .mapping import MappingResolver
 from .metrics import ENERGY_TABLE_PJ, Report, RooflineTerms, roofline
 from .spec import AcceleratorSpec, load_spec
+from .vectorized import VectorBackend
 
 __all__ = [
     "Einsum", "Semiring", "dense_reference", "parse_einsum",
-    "Fiber", "FTensor", "CascadeSimulator", "SimResult",
+    "Fiber", "FTensor", "CSF", "CascadeSimulator", "SimResult",
     "check_against_dense", "MappingResolver", "ENERGY_TABLE_PJ",
     "Report", "RooflineTerms", "roofline", "AcceleratorSpec", "load_spec",
+    "ExecutorBackend", "PythonBackend", "VectorBackend", "get_backend",
 ]

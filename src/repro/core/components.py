@@ -96,14 +96,16 @@ class StorageLevel:
 
     # -------------------------------------------------------------- #
     def touch(self, key: Any, nbytes: float, rw: str,
-              fill_bytes: Optional[float] = None) -> None:
-        """One access of ``nbytes``; ``fill_bytes`` is the transfer size
-        on a miss (subtree for eager bindings, line for caches)."""
-        self.access_bytes += nbytes
+              fill_bytes: Optional[float] = None, n: int = 1) -> None:
+        """``n`` accesses of ``nbytes`` each; ``fill_bytes`` is the
+        transfer size on a miss (subtree for eager bindings, line for
+        caches).  Aggregate touches (n > 1, from the vector backend)
+        count every access but model residency as a single fill."""
+        self.access_bytes += nbytes * n
         if rw == "r":
-            self.reads += 1
+            self.reads += n
         else:
-            self.writes += 1
+            self.writes += n
         got = self.resident.get(key)
         if got is not None:
             self.resident.move_to_end(key)
@@ -351,14 +353,14 @@ class EinsumModel:
     # -------------------------------------------------------------- #
     # event entry points (called by PerformanceModel)
     # -------------------------------------------------------------- #
-    def on_iterate(self, rank: str, coord: Any) -> None:
+    def on_iterate(self, rank: str, coord: Any, n: int = 1) -> None:
         if rank in self.space_ranks:
             self._space_ctx[rank] = coord
         if self.seq is not None:
-            self.seq.add(self.spatial_key())
+            self.seq.add(self.spatial_key(), n)
 
     def on_touch(self, tensor: str, rank: str, path: Tuple, kind: str,
-                 rw: str) -> None:
+                 rw: str, n: int = 1) -> None:
         fmt = self._fmt(tensor)
         nbytes = touch_bytes(fmt, rank, kind)
         chain = self.chains.get((tensor, kind))
@@ -370,10 +372,17 @@ class EinsumModel:
             if tensor in self.stream_tensors:
                 return
             if nbytes:
-                self.dram.access(nbytes, rw)
+                self.dram.access(nbytes * n, rw)
             return
         lvl = chain[0]
         sb = lvl.binding
+        if n > 1 or not path:
+            # aggregate touch (vector backend): no per-element path, so
+            # residency is modeled at (rank, kind) granularity -- counts
+            # are exact, locality is approximate.
+            lvl.touch((tensor, rank, kind), nbytes, rw,
+                      fill_bytes=nbytes, n=n)
+            return
         if sb.style == "eager":
             # residency granule: the subtree under the binding rank
             ft = self.tensors.get(tensor)
@@ -624,17 +633,19 @@ class PerformanceModel(Instrumentation):
             self.dram.total_bytes - self._dram_mark
         self._cur = None
 
-    def touch(self, einsum, tensor, rank, path, kind, rw):
+    def touch(self, einsum, tensor, rank, path, kind, rw, n=1):
         if self._cur is not None:
-            self._cur.on_touch(tensor, rank, path, kind, rw)
+            self._cur.on_touch(tensor, rank, path, kind, rw, n)
 
-    def advance(self, einsum, rank):
+    def advance(self, einsum, rank, n=1):
+        # n > 1 (aggregate) epochs with no interleaved touches collapse
+        # to one effective eviction; evict_all is idempotent
         if self._cur is not None:
             self._cur.on_advance(rank)
 
     def iterate(self, einsum, rank, n=1, coord=None):
         if self._cur is not None:
-            self._cur.on_iterate(rank, coord)
+            self._cur.on_iterate(rank, coord, n)
 
     def compute(self, einsum, op, n=1):
         if self._cur is not None:

@@ -27,15 +27,20 @@ from .spec import FormatSpec, RankFormat, TensorFormat
 def touch_bytes(fmt: TensorFormat, rank: str, kind: str) -> float:
     """Bytes moved by touching one coordinate/payload at ``rank``."""
     rf = fmt.ranks.get(rank, RankFormat())
-    if kind == "coord":
+
+    def coord_cost() -> float:
         if rf.format == "U":
             return 0.0                      # positional; nothing stored
+        if rf.format == "B":
+            return 1.0 / 8.0                # bitmap: one bit per position
         return rf.cbits / 8.0
+
+    if kind == "coord":
+        return coord_cost()
     if kind == "payload":
         return rf.pbits / 8.0
     if kind == "elem":
-        c = 0.0 if rf.format == "U" else rf.cbits / 8.0
-        return c + rf.pbits / 8.0
+        return coord_cost() + rf.pbits / 8.0
     raise ValueError(kind)
 
 

@@ -24,7 +24,7 @@ from .cascade import CascadeDAG
 from .components import PerformanceModel
 from .einsum import Semiring
 from .fibertree import Fiber, FTensor
-from .iteration import EinsumExecutor
+from .iteration import EinsumExecutor, ExecutorBackend, get_backend
 from .mapping import EinsumPlan, MappingResolver
 from .metrics import Report, evaluate
 from .spec import AcceleratorSpec
@@ -133,14 +133,21 @@ class SimResult:
 
 
 class CascadeSimulator:
-    """spec + real input tensors -> outputs + performance report."""
+    """spec + real input tensors -> outputs + performance report.
+
+    ``backend`` selects the execution engine per Einsum: 'python' (the
+    object-interpreter oracle), 'vector' (columnar CSF co-iteration,
+    with transparent per-Einsum fallback to the oracle for unsupported
+    plans), or any ExecutorBackend instance."""
 
     def __init__(self, spec: AcceleratorSpec,
                  params: Optional[Dict[str, int]] = None,
                  semiring: Optional[Semiring] = None,
                  extra_instr: Optional[Instrumentation] = None,
-                 model: bool = True):
+                 model: bool = True,
+                 backend: "str | ExecutorBackend | None" = None):
         self.spec = spec
+        self.backend: ExecutorBackend = get_backend(backend)
         self.resolver = MappingResolver(spec, params)
         self.semiring = semiring or spec.einsum.semiring
         self.dag = CascadeDAG.from_spec(spec)
@@ -237,11 +244,10 @@ class CascadeSimulator:
                 self.model.register_exec_tensors(out_name, exec_forms)
 
             strategy, leader = self._isect_config(out_name)
-            executor = EinsumExecutor(
+            out_exec = self.backend.execute(
                 plan, exec_forms, shapes, semiring=self.semiring,
                 instr=self.instr, out_initial=out_initial,
                 isect_strategy=strategy, isect_leader=leader)
-            out_exec = executor.run()
 
             declared_order = (self.spec.mapping.rank_order.get(out_name)
                               or self.spec.einsum.declaration[out_name])
@@ -304,13 +310,15 @@ def check_against_dense(spec: AcceleratorSpec, inputs: Dict[str, np.ndarray],
                         var_shapes: Dict[str, int],
                         params: Optional[Dict[str, int]] = None,
                         semiring: Optional[Semiring] = None,
-                        atol: float = 1e-8) -> bool:
+                        atol: float = 1e-8,
+                        backend: "str | ExecutorBackend | None" = None
+                        ) -> bool:
     """Run the fibertree path and the brute-force dense oracle; compare
     every cascade output."""
     from .einsum import dense_reference
 
     sim = CascadeSimulator(spec, params=params, semiring=semiring,
-                           model=False)
+                           model=False, backend=backend)
     res = sim.run(dict(inputs), var_shapes)
 
     dense: Dict[str, np.ndarray] = {k: np.asarray(v)

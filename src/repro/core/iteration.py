@@ -624,3 +624,59 @@ class EinsumExecutor:
                 self.instr.compute(self.name, "add")
                 return self.semiring.sub(lv, rv)
         raise TypeError(f"bad expr {expr!r}")
+
+
+# ---------------------------------------------------------------------- #
+# pluggable execution backends
+# ---------------------------------------------------------------------- #
+class ExecutorBackend:
+    """Strategy interface: executes one mapped Einsum on execution-form
+    tensors and returns the output fibertree in loop-concordant order.
+
+    Implementations must be interchangeable: identical output tensors
+    and identical aggregate Instrumentation action counts for the same
+    (plan, tensors) inputs.  ``PythonBackend`` is the per-element
+    correctness oracle; ``VectorBackend`` (core/vectorized.py) runs
+    per-rank co-iteration over columnar CSF arrays and reports the same
+    action counts in aggregate (see DESIGN.md).
+    """
+
+    name = "abstract"
+
+    def execute(self, plan: EinsumPlan, tensors: Dict[str, FTensor],
+                var_shapes: Dict[str, int],
+                semiring: Optional[Semiring] = None,
+                instr: Optional[Instrumentation] = None,
+                out_initial: Optional[FTensor] = None,
+                isect_strategy: str = "two_finger",
+                isect_leader: Optional[str] = None) -> FTensor:
+        raise NotImplementedError
+
+
+class PythonBackend(ExecutorBackend):
+    """The original object-interpreter path, kept as the oracle."""
+
+    name = "python"
+
+    def execute(self, plan, tensors, var_shapes, semiring=None, instr=None,
+                out_initial=None, isect_strategy="two_finger",
+                isect_leader=None) -> FTensor:
+        return EinsumExecutor(
+            plan, tensors, var_shapes, semiring=semiring, instr=instr,
+            out_initial=out_initial, isect_strategy=isect_strategy,
+            isect_leader=isect_leader).run()
+
+
+def get_backend(backend: "str | ExecutorBackend | None") -> ExecutorBackend:
+    """Resolve a backend selection ('python' | 'vector' | instance)."""
+    if backend is None:
+        return PythonBackend()
+    if isinstance(backend, ExecutorBackend):
+        return backend
+    if backend == "python":
+        return PythonBackend()
+    if backend == "vector":
+        from .vectorized import VectorBackend
+        return VectorBackend()
+    raise ValueError(f"unknown execution backend {backend!r} "
+                     f"(expected 'python' or 'vector')")

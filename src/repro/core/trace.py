@@ -11,7 +11,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 
 class Instrumentation:
-    """Event sink. All methods are no-ops; subclasses override."""
+    """Event sink. All methods are no-ops; subclasses override.
+
+    Every count-like method takes ``n`` so a vectorized backend can
+    report the same actions in aggregate (one call for n events) that
+    the Python interpreter reports element-by-element; per-element
+    ``path`` context is then unavailable (empty tuple).
+    """
 
     def begin_einsum(self, einsum: str) -> None: ...
 
@@ -19,10 +25,10 @@ class Instrumentation:
 
     # storage: element touch. path = coords root->here, kind 'coord'|'payload'
     def touch(self, einsum: str, tensor: str, rank: str,
-              path: Tuple, kind: str, rw: str) -> None: ...
+              path: Tuple, kind: str, rw: str, n: int = 1) -> None: ...
 
     # loop rank advanced to a new coordinate (epoch marker for buffets)
-    def advance(self, einsum: str, rank: str) -> None: ...
+    def advance(self, einsum: str, rank: str, n: int = 1) -> None: ...
 
     # sequencer: one coordinate enumerated at this loop rank
     def iterate(self, einsum: str, rank: str, n: int = 1,
@@ -59,13 +65,13 @@ class CollectingInstr(Instrumentation):
     advances: Counter = field(default_factory=Counter)
     merges: List[Tuple[str, str, int, int]] = field(default_factory=list)
 
-    def touch(self, einsum, tensor, rank, path, kind, rw):
-        self.touch_counts[(einsum, tensor, rank, kind, rw)] += 1
+    def touch(self, einsum, tensor, rank, path, kind, rw, n=1):
+        self.touch_counts[(einsum, tensor, rank, kind, rw)] += n
         if self.record_touches:
             self.touches.append((einsum, tensor, rank, path, kind, rw))
 
-    def advance(self, einsum, rank):
-        self.advances[(einsum, rank)] += 1
+    def advance(self, einsum, rank, n=1):
+        self.advances[(einsum, rank)] += n
 
     def iterate(self, einsum, rank, n=1, coord=None):
         self.iter_counts[(einsum, rank)] += n
@@ -97,13 +103,13 @@ class TeeInstr(Instrumentation):
         for s in self.sinks:
             s.end_einsum(einsum)
 
-    def touch(self, *a):
+    def touch(self, *a, **k):
         for s in self.sinks:
-            s.touch(*a)
+            s.touch(*a, **k)
 
-    def advance(self, *a):
+    def advance(self, *a, **k):
         for s in self.sinks:
-            s.advance(*a)
+            s.advance(*a, **k)
 
     def iterate(self, *a, **k):
         for s in self.sinks:

@@ -1,0 +1,489 @@
+"""VectorBackend: columnar per-rank co-iteration over CSF arrays.
+
+Executes the same mapped loop nests as the Python interpreter
+(``EinsumExecutor``) but one *rank* at a time instead of one *element*
+at a time: the set of live iteration points at each loop level (the
+frontier) is a struct-of-arrays, and advancing one loop level is a
+handful of batched array ops -- segment expansion, offset-keyed sorted
+intersection / union (``repro.kernels.ops``: the Pallas skip-ahead
+intersection kernel on TPU, its ``searchsorted`` lowering on CPU), and
+segmented reduction into the output.
+
+Instrumentation counts are emitted in aggregate (one ``n``-weighted
+call per action kind) and match the interpreter's per-element counts
+exactly; output fibertrees are bit-identical, including float
+accumulation order (contributions to one output coordinate are summed
+in loop-iteration order).  Plans outside the supported class -- affine
+or constant indices, take(), partitioned / flattened ranks, driverless
+(dense) loop ranks, >2 co-iterated tensors per rank, non-arithmetic
+semirings, leader-follower intersection -- transparently fall back to
+``PythonBackend``, so ``VectorBackend`` is safe as a drop-in default.
+See DESIGN.md for the architecture and the exact count semantics.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .csf import CSF, _from_sorted_points
+from .einsum import BinOp, Semiring, TensorAccess
+from .fibertree import FTensor
+from .iteration import EinsumExecutor, ExecutorBackend, PythonBackend
+from .mapping import EinsumPlan
+from .trace import Instrumentation, NullInstr
+
+#: level-0 frontier slice size used to bound peak expansion memory when
+#: the outermost loop rank is an output rank (slices are independent)
+DEFAULT_CHUNK_ITEMS = 1024
+
+
+class _Unsupported(Exception):
+    """Plan shape the vector path does not cover (-> fallback)."""
+
+
+# ---------------------------------------------------------------------- #
+# expression analysis
+# ---------------------------------------------------------------------- #
+def _product_accesses(expr) -> Optional[List[TensorAccess]]:
+    """Accesses of a pure multiplicative chain, in evaluation order."""
+    out: List[TensorAccess] = []
+
+    def rec(e) -> bool:
+        if isinstance(e, TensorAccess):
+            out.append(e)
+            return True
+        if isinstance(e, BinOp) and e.op == "*":
+            return rec(e.lhs) and rec(e.rhs)
+        return False
+
+    return out if rec(expr) else None
+
+
+def _classify_expr(expr) -> Tuple[str, List[TensorAccess]]:
+    """('product', accesses) or ('sum', [lhs, rhs]); raises otherwise."""
+    accs = _product_accesses(expr)
+    if accs is not None:
+        return "product", accs
+    if (isinstance(expr, BinOp) and expr.op in "+-"
+            and isinstance(expr.lhs, TensorAccess)
+            and isinstance(expr.rhs, TensorAccess)):
+        return "sum", [expr.lhs, expr.rhs]
+    raise _Unsupported(f"expression shape {expr}")
+
+
+# ---------------------------------------------------------------------- #
+# batched helpers
+# ---------------------------------------------------------------------- #
+def _expand(lo: np.ndarray, hi: np.ndarray
+            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten per-item [lo, hi) ranges: (item_of, elem, counts, offs)."""
+    counts = (hi - lo).astype(np.int64)
+    total = int(counts.sum())
+    item_of = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+    offs = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, out=offs[1:])
+    within = np.arange(total, dtype=np.int64) - offs[item_of]
+    elem = lo[item_of] + within
+    return item_of, elem, counts, offs
+
+
+def _seg_last(coords: np.ndarray, offs: np.ndarray, counts: np.ndarray
+              ) -> np.ndarray:
+    """Last coordinate of each segment (0 for empty segments); safe
+    when the whole expanded array is empty."""
+    out = np.zeros(len(counts), dtype=np.int64)
+    if len(coords):
+        out = np.where(counts > 0,
+                       coords[np.maximum(offs[1:] - 1, 0)], 0)
+    return out
+
+
+class _Frontier:
+    """Live iteration points: per-tensor element positions + captured
+    output coordinate columns.  ``pos`` semantics: >= 0 element index at
+    the tensor's current depth, -1 absent (union), -2 not yet descended
+    (root)."""
+
+    __slots__ = ("n", "pos", "out_cols")
+
+    def __init__(self, n: int, pos: Dict[str, np.ndarray],
+                 out_cols: List[np.ndarray]):
+        self.n = n
+        self.pos = pos
+        self.out_cols = out_cols
+
+    def take(self, idx: np.ndarray, extra_col: Optional[np.ndarray] = None
+             ) -> "_Frontier":
+        cols = [c[idx] for c in self.out_cols]
+        if extra_col is not None:
+            cols.append(extra_col)
+        return _Frontier(len(idx), {t: p[idx] for t, p in self.pos.items()},
+                         cols)
+
+    def slice(self, i0: int, i1: int) -> "_Frontier":
+        return _Frontier(i1 - i0,
+                         {t: p[i0:i1] for t, p in self.pos.items()},
+                         [c[i0:i1] for c in self.out_cols])
+
+
+class VectorBackend(ExecutorBackend):
+    name = "vector"
+
+    def __init__(self, chunk_items: int = DEFAULT_CHUNK_ITEMS,
+                 fallback: bool = True):
+        self.chunk_items = chunk_items
+        self.fallback = fallback
+        self._oracle = PythonBackend()
+        #: 'vector' or 'fallback' for the most recent execute() call
+        self.last_path: Optional[str] = None
+
+    # ------------------------------------------------------------------ #
+    def execute(self, plan, tensors, var_shapes, semiring=None, instr=None,
+                out_initial=None, isect_strategy="two_finger",
+                isect_leader=None) -> FTensor:
+        instr = instr or NullInstr()
+        semiring = semiring or Semiring.arithmetic()
+        try:
+            csf_out, _ = self._run_vectorized(
+                plan, tensors, semiring, instr, out_initial, isect_strategy)
+            self.last_path = "vector"
+            return csf_out.to_ftensor()
+        except _Unsupported:
+            if not self.fallback:
+                raise
+            self.last_path = "fallback"
+            ften = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
+                    for t, v in tensors.items()}
+            return self._oracle.execute(
+                plan, ften, var_shapes, semiring=semiring, instr=instr,
+                out_initial=out_initial, isect_strategy=isect_strategy,
+                isect_leader=isect_leader)
+
+    def execute_csf(self, plan, tensors, semiring=None, instr=None,
+                    isect_strategy="two_finger") -> Tuple[CSF, Dict]:
+        """Vector path only (no fallback): returns the output as a CSF
+        plus run stats, never materializing per-element Python objects.
+        This is the large-scale entry point used by the throughput
+        benchmark."""
+        instr = instr or NullInstr()
+        semiring = semiring or Semiring.arithmetic()
+        return self._run_vectorized(plan, tensors, semiring, instr,
+                                    None, isect_strategy)
+
+    # ------------------------------------------------------------------ #
+    # supported-plan analysis
+    # ------------------------------------------------------------------ #
+    def _analyze(self, ex: EinsumExecutor, semiring: Semiring,
+                 out_initial, isect_strategy: str):
+        if out_initial is not None:
+            raise _Unsupported("update-in-place output")
+        if semiring.name != "arith":
+            raise _Unsupported(f"semiring {semiring.name}")
+        einsum = ex.einsum
+        if not einsum.output.indices:
+            raise _Unsupported("bare copy")
+        if any(not ix.is_bare for ix in einsum.output.indices):
+            raise _Unsupported("non-bare output indices")
+        kind, accs = _classify_expr(einsum.expr)
+        for a in accs:
+            if any(not ix.is_bare for ix in a.indices):
+                raise _Unsupported(f"non-bare access {a}")
+        if ex.unmatched_out:
+            raise _Unsupported("output ranks bound at the leaf")
+        plan = ex.plan
+        if any(ri.flattened for ri in plan.loop_order):
+            raise _Unsupported("flattened loop ranks")
+        order = [a.tensor for a in accs]
+        for t in order:
+            if len(ex.drive[t]) != len(plan.tensors[t].exec_order):
+                raise _Unsupported(f"{t}: lookup (non-driving) levels")
+        # per-level driver lists in expression order
+        levels: List[Tuple[str, List[Tuple[str, int]]]] = []
+        for li, ri in enumerate(plan.loop_order):
+            drv = [(t, ex.drive[t][li]) for t in order if li in ex.drive[t]]
+            if len(drv) == 0:
+                raise _Unsupported(f"driverless (dense) rank {ri.name}")
+            if len(drv) > 2:
+                raise _Unsupported(f">2 drivers at rank {ri.name}")
+            if (kind == "product" and len(drv) == 2
+                    and isect_strategy != "two_finger"):
+                raise _Unsupported(f"{isect_strategy} intersection")
+            levels.append((ri.name, drv))
+        if kind == "sum":
+            keys = {t: frozenset(ex.drive[t]) for t in order}
+            all_levels = frozenset(range(len(plan.loop_order)))
+            if any(k != all_levels for k in keys.values()):
+                raise _Unsupported("summands with unaligned ranks")
+        return kind, accs, levels
+
+    # ------------------------------------------------------------------ #
+    # the vector loop nest
+    # ------------------------------------------------------------------ #
+    def _run_vectorized(self, plan: EinsumPlan, tensors: Dict[str, Any],
+                        semiring: Semiring, instr: Instrumentation,
+                        out_initial, isect_strategy: str
+                        ) -> Tuple[CSF, Dict]:
+        ex = EinsumExecutor(plan, tensors, {}, semiring=semiring,
+                            instr=NullInstr(),
+                            isect_strategy=isect_strategy)
+        kind, accs, levels = self._analyze(ex, semiring, out_initial,
+                                           isect_strategy)
+        name = plan.output
+        csf: Dict[str, CSF] = {}
+        for a in accs:
+            v = tensors[a.tensor]
+            c = v if isinstance(v, CSF) else CSF.from_ftensor(v)
+            if any(c.level_width(d) != 1 for d in range(c.ndim)):
+                raise _Unsupported(f"{a.tensor}: tuple coordinates")
+            csf[a.tensor] = c
+
+        counts: Counter = Counter()
+        leaf_depth = {t: len(plan.tensors[t].exec_order) - 1
+                      for t in csf}
+        out_ranks = plan.tensors[name].exec_order
+
+        frontier = _Frontier(1, {t: np.full(1, -2, dtype=np.int64)
+                                 for t in csf}, [])
+
+        # level 0 first, then (optionally chunked) deeper levels
+        frontier = self._level(0, levels, ex, csf, frontier, counts, kind)
+        chunked = (0 in ex.out_descend and frontier.n > self.chunk_items
+                   and len(levels) > 1)
+        paths_parts: List[np.ndarray] = []
+        vals_parts: List[np.ndarray] = []
+        step = self.chunk_items if chunked else max(frontier.n, 1)
+        for i0 in range(0, max(frontier.n, 1), step):
+            part = frontier.slice(i0, min(i0 + step, frontier.n))
+            for li in range(1, len(levels)):
+                part = self._level(li, levels, ex, csf, part, counts, kind)
+            p, v = self._finalize(part, ex, csf, counts)
+            if len(v):
+                paths_parts.append(p)
+                vals_parts.append(v)
+
+        if paths_parts:
+            paths = np.concatenate(paths_parts, axis=0)
+            vals = np.concatenate(vals_parts)
+        else:
+            paths = np.zeros((0, len(out_ranks)), dtype=np.int64)
+            vals = np.zeros(0, dtype=np.float64)
+        out_csf = _from_sorted_points(
+            name, out_ranks, [paths[:, d:d + 1] for d in range(paths.shape[1])],
+            vals, {r: None for r in out_ranks}, 0,
+            {r for r in out_ranks
+             if plan.created_ranks.get(r) == "upper"})
+
+        self._emit(instr, name, counts)
+        stats = {"leaf_points": int(counts.get(("leaf",), 0)),
+                 "muls": int(counts.get(("compute", "mul"), 0)),
+                 "out_nnz": int(len(vals))}
+        return out_csf, stats
+
+    # ------------------------------------------------------------------ #
+    def _ranges(self, c: CSF, d: int, pos: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        n = len(pos)
+        if d == 0:
+            n0 = len(c.coords[0])
+            return (np.zeros(n, dtype=np.int64),
+                    np.full(n, n0, dtype=np.int64))
+        seg = c.segments[d]
+        valid = pos >= 0
+        # clamp also covers the all-absent / empty-tensor case, where
+        # seg has a single entry and no position is valid
+        safe = np.clip(pos, 0, max(len(seg) - 2, 0))
+        lo = np.where(valid, seg[safe], 0)
+        hi = np.where(valid, seg[np.minimum(safe + 1, len(seg) - 1)], 0)
+        return lo, hi
+
+    def _level(self, li: int, levels, ex: EinsumExecutor,
+               csf: Dict[str, CSF], fr: _Frontier, counts: Counter,
+               kind: str) -> _Frontier:
+        rank, drv = levels[li]
+        name = ex.name
+        out_here = li in ex.out_descend
+
+        if len(drv) == 1:
+            t, d = drv[0]
+            lo, hi = self._ranges(csf[t], d, fr.pos[t])
+            item_of, elem, _, _ = _expand(lo, hi)
+            coord = csf[t].coords[d][elem, 0]
+            n = len(elem)
+            counts[("touch", t, rank, "coord", "r")] += n
+            counts[("iterate", rank)] += n
+            counts[("advance", rank)] += n
+            if d == self._leaf_depth(ex, t):
+                counts[("touch", t, rank, "payload", "r")] += n
+            nf = fr.take(item_of, coord if out_here else None)
+            nf.pos[t] = elem
+            return nf
+
+        (ta, da), (tb, db) = drv
+        ca, cb = csf[ta], csf[tb]
+        lo_a, hi_a = self._ranges(ca, da, fr.pos[ta])
+        lo_b, hi_b = self._ranges(cb, db, fr.pos[tb])
+        ia, ea, na, offs_a = _expand(lo_a, hi_a)
+        ib, eb, nb, offs_b = _expand(lo_b, hi_b)
+        coord_a = ca.coords[da][ea, 0].astype(np.int64)
+        coord_b = cb.coords[db][eb, 0].astype(np.int64)
+        mult = int(max(coord_a.max(initial=0), coord_b.max(initial=0))) + 1
+        akeys = ia * mult + coord_a
+        bkeys = ib * mult + coord_b
+
+        if kind == "product":
+            from repro.kernels import ops as kops
+            idx = kops.intersect_keys(akeys, bkeys)
+            hit = idx >= 0
+            n_match = int(hit.sum())
+            # two-finger pointer advances: elements <= the other side's
+            # last coordinate (within each item's fiber pair)
+            items = np.arange(fr.n, dtype=np.int64)
+            both = (na > 0) & (nb > 0)
+            bmax = _seg_last(coord_b, offs_b, nb)
+            amax = _seg_last(coord_a, offs_a, na)
+            adv_a = np.where(both, np.searchsorted(
+                akeys, items * mult + bmax, side="right") - offs_a[:-1], 0)
+            adv_b = np.where(both, np.searchsorted(
+                bkeys, items * mult + amax, side="right") - offs_b[:-1], 0)
+            touched_a = np.minimum(adv_a + 1, na)
+            touched_b = np.minimum(adv_b + 1, nb)
+            counts[("touch", ta, rank, "coord", "r")] += int(touched_a.sum())
+            counts[("touch", tb, rank, "coord", "r")] += int(touched_b.sum())
+            counts[("isect_step", rank, ta)] += int(adv_a.sum())
+            counts[("isect_step", rank, tb)] += int(adv_b.sum())
+            counts[("isect_match", rank)] += n_match
+            counts[("iterate", rank)] += n_match
+            counts[("advance", rank)] += n_match
+            if da == self._leaf_depth(ex, ta):
+                counts[("touch", ta, rank, "payload", "r")] += n_match
+            if db == self._leaf_depth(ex, tb):
+                counts[("touch", tb, rank, "payload", "r")] += n_match
+            sel = np.flatnonzero(hit)
+            nf = fr.take(ia[sel], coord_a[sel] if out_here else None)
+            nf.pos[ta] = ea[sel]
+            nf.pos[tb] = eb[idx[sel]]
+            return nf
+
+        # union (additive expression)
+        from repro.kernels import ops as kops
+        ukeys, pa, pb = kops.union_keys(akeys, bkeys)
+        n_u = len(ukeys)
+        item_u = ukeys // mult
+        coord_u = ukeys % mult
+        counts[("touch", ta, rank, "coord", "r")] += int(len(akeys))
+        counts[("touch", tb, rank, "coord", "r")] += int(len(bkeys))
+        counts[("iterate", rank)] += n_u
+        counts[("advance", rank)] += n_u
+        present_a = pa >= 0
+        present_b = pb >= 0
+        if da == self._leaf_depth(ex, ta):
+            counts[("touch", ta, rank, "payload", "r")] += int(present_a.sum())
+        if db == self._leaf_depth(ex, tb):
+            counts[("touch", tb, rank, "payload", "r")] += int(present_b.sum())
+        nf = fr.take(item_u, coord_u if out_here else None)
+        pos_a = np.full(n_u, -1, dtype=np.int64)
+        pos_b = np.full(n_u, -1, dtype=np.int64)
+        if len(ea):
+            pos_a[present_a] = ea[pa[present_a]]
+        if len(eb):
+            pos_b[present_b] = eb[pb[present_b]]
+        nf.pos[ta] = pos_a
+        nf.pos[tb] = pos_b
+        return nf
+
+    @staticmethod
+    def _leaf_depth(ex: EinsumExecutor, t: str) -> int:
+        return len(ex.plan.tensors[t].exec_order) - 1
+
+    # ------------------------------------------------------------------ #
+    def _finalize(self, fr: _Frontier, ex: EinsumExecutor,
+                  csf: Dict[str, CSF], counts: Counter
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Leaf evaluation + segmented in-order reduction."""
+        name = ex.name
+        counts[("leaf",)] += fr.n
+        leafvals: Dict[str, np.ndarray] = {}
+        for t, c in csf.items():
+            pos = fr.pos[t]
+            v = np.zeros(fr.n, dtype=np.float64)
+            present = pos >= 0
+            if len(c.values):
+                v[present] = c.values[pos[present]]
+            leafvals[t] = v
+
+        def ev(e) -> np.ndarray:
+            if isinstance(e, TensorAccess):
+                return leafvals[e.tensor]
+            assert isinstance(e, BinOp)
+            lv, rv = ev(e.lhs), ev(e.rhs)
+            if e.op == "*":
+                mask = (lv != 0) & (rv != 0)
+                counts[("compute", "mul")] += int(mask.sum())
+                return np.where(mask, lv * rv, 0.0)
+            if e.op == "+":
+                both = (lv != 0) & (rv != 0)
+                counts[("compute", "add")] += int(both.sum())
+                return np.where(lv == 0, rv, np.where(rv == 0, lv, lv + rv))
+            counts[("compute", "add")] += lv.size
+            return lv - rv
+
+        vals = ev(ex.einsum.expr)
+        if fr.out_cols:
+            paths = np.stack(fr.out_cols, axis=1)
+        else:
+            paths = np.zeros((fr.n, 0), dtype=np.int64)
+        nz = np.flatnonzero(vals != 0)
+        paths, vals = paths[nz], vals[nz]
+        if len(vals) == 0:
+            return paths, vals
+        ncol = paths.shape[1]
+        order = np.lexsort(tuple(paths[:, c] for c in range(ncol - 1, -1, -1)))
+        paths, vals = paths[order], vals[order]
+        boundary = np.ones(len(vals), dtype=bool)
+        if len(vals) > 1:
+            boundary[1:] = np.any(paths[1:] != paths[:-1], axis=1)
+        starts = np.flatnonzero(boundary)
+        group_counts = np.diff(np.append(starts, len(vals)))
+        sums = vals[starts].copy()
+        # accumulate strictly in iteration order (matches the
+        # interpreter's sequential semiring.add, bit for bit)
+        step = 1
+        while True:
+            act = np.flatnonzero(group_counts > step)
+            if len(act) == 0:
+                break
+            sums[act] = sums[act] + vals[starts[act] + step]
+            step += 1
+        out_rank = ex.plan.tensors[name].exec_order[-1]
+        n_contrib = len(vals)
+        n_out = len(starts)
+        counts[("touch", name, out_rank, "payload", "w")] += n_contrib
+        counts[("touch", name, out_rank, "payload", "r")] += n_contrib - n_out
+        counts[("compute", "add")] += n_contrib - n_out
+        return paths[starts], sums
+
+    # ------------------------------------------------------------------ #
+    def _emit(self, instr: Instrumentation, name: str,
+              counts: Counter) -> None:
+        instr.begin_einsum(name)
+        for key in sorted(counts, key=repr):
+            n = int(counts[key])
+            if n <= 0 or key == ("leaf",):
+                continue
+            tag = key[0]
+            if tag == "touch":
+                _, tensor, rank, kindk, rw = key
+                instr.touch(name, tensor, rank, (), kindk, rw, n=n)
+            elif tag == "iterate":
+                instr.iterate(name, key[1], n=n)
+            elif tag == "advance":
+                instr.advance(name, key[1], n=n)
+            elif tag == "compute":
+                instr.compute(name, key[1], n=n)
+            elif tag == "isect_step":
+                instr.isect_step(name, key[1], key[2], n=n)
+            elif tag == "isect_match":
+                instr.isect_match(name, key[1], n=n)
+        instr.end_einsum(name)

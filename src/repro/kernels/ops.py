@@ -3,6 +3,15 @@
 On CPU (this container) the kernels execute in interpret mode -- the
 kernel body runs in Python for correctness validation; on TPU the same
 calls compile to Mosaic.
+
+Also hosts the sorted-coordinate co-iteration primitives used by the
+vectorized execution backend (``repro.core.vectorized``): skip-ahead
+intersection and merge-path union over *offset-keyed* fibers (many
+fibers packed into one globally sorted key array).  On TPU these run
+the Pallas kernels; on CPU they lower to the equivalent
+``np.searchsorted`` formulation, because interpret-mode Pallas re-runs
+the kernel body per grid step and would dominate the very loop nests
+the vector backend exists to accelerate (DESIGN.md, "TPU adaptation").
 """
 from __future__ import annotations
 
@@ -12,11 +21,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import pallas as pl
 
 from repro.kernels import block_sparse_matmul as _bsmm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import intersect as _isect
 from repro.kernels import ssd_chunk as _ssd
+
+_I32_MAX = np.iinfo(np.int32).max
 
 
 def _on_tpu() -> bool:
@@ -46,6 +58,143 @@ def pad_sorted(coords: np.ndarray, multiple: int = 1024) -> np.ndarray:
     out = np.full(n_pad, np.iinfo(np.int32).max, np.int32)
     out[:n] = coords
     return out
+
+
+# ---------------------------------------------------------------------- #
+# sorted-union / merge kernel (merge-path: one vectorized binary search
+# per output slot, the union dual of the skip-ahead intersection kernel)
+# ---------------------------------------------------------------------- #
+def _merge_kernel(a_ref, b_ref, out_ref, src_ref, *, n: int, m: int,
+                  block: int):
+    a = a_ref[...]                                     # [n] int32 sorted
+    b = b_ref[...]                                     # [m] int32 sorted
+    i_blk = pl.program_id(0)
+    k = i_blk * block + jnp.arange(block, dtype=jnp.int32)   # output slots
+
+    # merge-path partition: i = #elements taken from a among the first k,
+    # found by binary search (ties resolved a-first, i.e. stable merge)
+    lo = jnp.maximum(0, k - m)
+    hi = jnp.minimum(k, n)
+    steps = max(1, (n + m).bit_length())
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        j = k - mid - 1
+        av = a[jnp.clip(mid, 0, n - 1)]
+        bv = b[jnp.clip(j, 0, m - 1)]
+        take_more_a = (mid < n) & (j >= 0) & (av <= bv)
+        lo = jnp.where(take_more_a, mid + 1, lo)
+        hi = jnp.where(take_more_a, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    i = lo
+    j = k - i
+    av = a[jnp.clip(i, 0, n - 1)]
+    bv = b[jnp.clip(j, 0, m - 1)]
+    from_a = (i < n) & ((j >= m) | (av <= bv))
+    out_ref[...] = jnp.where(from_a, av, bv)
+    src_ref[...] = jnp.where(from_a, 0, 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_sorted(a: jnp.ndarray, b: jnp.ndarray, block: int = 1024,
+                 interpret: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable merge of two sorted (PAD-padded) int32 arrays.
+
+    Returns (merged [n+m], src [n+m]) where src is 0 for elements taken
+    from ``a`` and 1 for ``b``; on equal values ``a`` comes first."""
+    n, = a.shape
+    m, = b.shape
+    total = n + m
+    block = min(block, total)
+    grid = (pl.cdiv(total, block),)
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, n=n, m=m, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((total,), jnp.int32),
+                   jax.ShapeDtypeStruct((total,), jnp.int32)],
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------- #
+# offset-keyed co-iteration primitives (vector backend entry points)
+# ---------------------------------------------------------------------- #
+def _fits_i32(a: np.ndarray) -> bool:
+    return len(a) == 0 or int(a[-1]) < _I32_MAX
+
+
+def intersect_keys(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Positions in ``b`` of every element of ``a`` (both sorted int64
+    key arrays; keys unique per array), -1 where absent.
+
+    TPU: Pallas skip-ahead intersection kernel (int32 key domain).
+    CPU: the same vectorized-binary-search semantics via searchsorted.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    if len(a) == 0 or len(b) == 0:
+        return np.full(len(a), -1, dtype=np.int64)
+    if _on_tpu() and _fits_i32(a) and _fits_i32(b):
+        pa = pad_sorted(a.astype(np.int32), 512)
+        pb = pad_sorted(b.astype(np.int32), 512)
+        idx = np.asarray(_isect.intersect_sorted(
+            jnp.asarray(pa), jnp.asarray(pb), block=512))[:len(a)]
+        return idx.astype(np.int64)
+    pos = np.searchsorted(b, a)
+    safe = np.minimum(pos, len(b) - 1)
+    hit = (pos < len(b)) & (b[safe] == a)
+    return np.where(hit, safe, -1)
+
+
+def union_keys(a: np.ndarray, b: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted union of two sorted int64 key arrays (keys unique per
+    array).  Returns (union, pos_a, pos_b): for every union element its
+    position in ``a`` / ``b`` or -1.
+
+    TPU: Pallas merge-path kernel + host dedup; CPU: searchsorted."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    if len(a) == 0:
+        return (b.copy(), np.full(len(b), -1, dtype=np.int64),
+                np.arange(len(b), dtype=np.int64))
+    if len(b) == 0:
+        return (a.copy(), np.arange(len(a), dtype=np.int64),
+                np.full(len(a), -1, dtype=np.int64))
+    if _on_tpu() and _fits_i32(a) and _fits_i32(b):
+        # the kernel's input contract: sorted int32, PAD-padded to a
+        # block multiple; pads merge to the tail and are stripped here
+        pa32 = pad_sorted(a.astype(np.int32), 256)
+        pb32 = pad_sorted(b.astype(np.int32), 256)
+        merged, _ = merge_sorted(jnp.asarray(pa32), jnp.asarray(pb32),
+                                 block=256)
+        merged = np.asarray(merged, dtype=np.int64)
+        merged = merged[merged < _I32_MAX]
+        keep = np.ones(len(merged), dtype=bool)
+        keep[1:] = merged[1:] != merged[:-1]
+        u = merged[keep]
+    else:
+        u = np.union1d(a, b)
+    pos_a = np.searchsorted(a, u)
+    safe_a = np.minimum(pos_a, len(a) - 1)
+    hit_a = (pos_a < len(a)) & (a[safe_a] == u)
+    pos_b = np.searchsorted(b, u)
+    safe_b = np.minimum(pos_b, len(b) - 1)
+    hit_b = (pos_b < len(b)) & (b[safe_b] == u)
+    return (u, np.where(hit_a, safe_a, -1).astype(np.int64),
+            np.where(hit_b, safe_b, -1).astype(np.int64))
 
 
 # ---------------------------------------------------------------------- #

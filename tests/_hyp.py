@@ -1,0 +1,66 @@
+"""Property-testing shim: real ``hypothesis`` when installed, otherwise
+a seeded random-sampling fallback with the same decorator surface, so
+the property tests still run (as deterministic seeded loops) without
+the optional dependency.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    FALLBACK_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(
+                lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def settings(max_examples=FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper: strategy params must not read as pytest
+            # fixtures (hypothesis hides them the same way)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", FALLBACK_EXAMPLES)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -97,6 +97,13 @@ def _zoo_inputs(name, rng):
             "X": rng.random((2, 2)),
         }
         return inputs, shapes
+    if name in ("rowwise-spmspm", "sparse-add"):
+        shapes = {"m": 20, "k": 20, "n": 20}
+        inputs = {
+            "A": rng.random((20, 20)) * (rng.random((20, 20)) < 0.25),
+            "B": rng.random((20, 20)) * (rng.random((20, 20)) < 0.25),
+        }
+        return inputs, shapes
     raise KeyError(name)
 
 

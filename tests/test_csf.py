@@ -1,0 +1,151 @@
+"""Columnar CSF representation: lossless FTensor round-trips and
+vectorized Section-3.2 transforms equivalent to the Fiber reference
+implementations."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
+from repro.core.csf import CSF
+from repro.core.fibertree import FTensor
+
+
+def rand_dense(seed, shape, density=0.3):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 10, size=shape).astype(float)
+    return a * (rng.random(shape) < density)
+
+
+def assert_same_tree(ft: FTensor, cs: CSF):
+    """Structural equality: the CSF converts back to the exact tree."""
+    back = cs.to_ftensor()
+    assert back.ranks == ft.ranks
+    assert back.root == ft.root
+    assert back.upper_ranks == ft.upper_ranks
+
+
+# ---------------------------------------------------------------------- #
+# conversion
+# ---------------------------------------------------------------------- #
+def test_roundtrip_lossless():
+    a = rand_dense(0, (6, 8, 5))
+    ft = FTensor.from_dense("T", ["M", "K", "N"], a)
+    cs = CSF.from_ftensor(ft)
+    assert cs.nnz == ft.nnz
+    assert np.array_equal(cs.to_dense(), a)
+    assert_same_tree(ft, cs)
+    assert cs.to_ftensor().rank_shapes == ft.rank_shapes
+
+
+def test_from_dense_and_coo():
+    a = rand_dense(1, (7, 9))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    assert_same_tree(ft, CSF.from_dense("A", ["M", "K"], a))
+    pts = np.argwhere(a != 0)
+    cs = CSF.from_coo("A", ["M", "K"], pts, a[tuple(pts.T)],
+                      {"M": 7, "K": 9})
+    assert_same_tree(ft, cs)
+    # unsorted + duplicate points: last value wins (insert semantics)
+    cs2 = CSF.from_coo("D", ["M"], [[3], [1], [3]], [1.0, 2.0, 9.0], {"M": 5})
+    assert cs2.to_ftensor().root.lookup(3) == 9.0
+    assert cs2.nnz == 2
+
+
+def test_empty_and_1d():
+    e = FTensor.from_dense("E", ["M", "K"], np.zeros((4, 4)))
+    assert_same_tree(e, CSF.from_ftensor(e))
+    v = FTensor.from_dense("V", ["K"], np.array([0.0, 3.0, 0.0, 7.0]))
+    cs = CSF.from_ftensor(v)
+    assert cs.nnz == 2
+    assert_same_tree(v, cs)
+
+
+# ---------------------------------------------------------------------- #
+# vectorized transforms vs Fiber reference implementations
+# ---------------------------------------------------------------------- #
+def test_swizzle_matches_reference():
+    a = rand_dense(2, (5, 6, 4))
+    ft = FTensor.from_dense("T", ["M", "K", "N"], a)
+    cs = CSF.from_ftensor(ft)
+    for order in (["N", "M", "K"], ["K", "N", "M"], ["M", "K", "N"]):
+        assert_same_tree(ft.swizzle(order), cs.swizzle(order))
+
+
+def test_partition_uniform_shape_matches_reference():
+    a = rand_dense(3, (9, 11))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    cs = CSF.from_ftensor(ft)
+    for rank, size in (("K", 3), ("M", 4), ("K", 1)):
+        fp = ft.partition_uniform_shape(rank, size)
+        cp = cs.partition_uniform_shape(rank, size)
+        assert cp.ranks == fp.ranks
+        assert cp.upper_ranks == fp.upper_ranks
+        assert_same_tree(fp, cp)
+
+
+def test_partition_uniform_occupancy_matches_reference():
+    a = rand_dense(4, (8, 13), density=0.5)
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    cs = CSF.from_ftensor(ft)
+    for rank, size in (("K", 4), ("M", 3), ("K", 2)):
+        assert_same_tree(ft.partition_uniform_occupancy(rank, size),
+                         cs.partition_uniform_occupancy(rank, size))
+
+
+def test_flatten_matches_reference():
+    a = rand_dense(5, (4, 5, 3))
+    ft = FTensor.from_dense("T", ["M", "K", "N"], a)
+    cs = CSF.from_ftensor(ft)
+    assert_same_tree(ft.flatten_ranks("M", "K"), cs.flatten_ranks("M", "K"))
+    assert_same_tree(ft.flatten_ranks("K", "N"), cs.flatten_ranks("K", "N"))
+
+
+def test_transform_chains_match_reference():
+    """The Figure-2 pipeline on arrays: flatten then occupancy-split."""
+    a = rand_dense(6, (6, 7))
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    cs = CSF.from_ftensor(ft)
+    fp = ft.flatten_ranks("M", "K").partition_uniform_occupancy("MK", 3)
+    cp = cs.flatten_ranks("M", "K").partition_uniform_occupancy("MK", 3)
+    assert_same_tree(fp, cp)
+    fp2 = ft.partition_uniform_shape("M", 2).swizzle(["K", "M1", "M0"])
+    cp2 = cs.partition_uniform_shape("M", 2).swizzle(["K", "M1", "M0"])
+    assert_same_tree(fp2, cp2)
+
+
+def test_shape_partition_rejects_flattened():
+    cs = CSF.from_ftensor(
+        FTensor.from_dense("A", ["M", "K"], rand_dense(7, (4, 4)))
+    ).flatten_ranks("M", "K")
+    with pytest.raises(ValueError):
+        cs.partition_uniform_shape("MK", 2)
+
+
+def test_content_points_drop_partition_uppers():
+    a = rand_dense(8, (8, 8))
+    cs = CSF.from_dense("A", ["M", "K"], a)
+    pt = cs.partition_uniform_shape("K", 3)
+    pts = pt.content_points()
+    base = cs.point_matrix()
+    assert sorted(map(tuple, pts.tolist())) == \
+        sorted(map(tuple, base.tolist()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 8),
+       k=st.integers(2, 8), size=st.integers(1, 5),
+       which=st.sampled_from(["swizzle", "shape", "occupancy", "flatten"]))
+def test_property_csf_transforms_match(seed, m, k, size, which):
+    a = rand_dense(seed, (m, k), density=0.4)
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    cs = CSF.from_ftensor(ft)
+    if which == "swizzle":
+        f, c = ft.swizzle(["K", "M"]), cs.swizzle(["K", "M"])
+    elif which == "shape":
+        f, c = (ft.partition_uniform_shape("K", size),
+                cs.partition_uniform_shape("K", size))
+    elif which == "occupancy":
+        f, c = (ft.partition_uniform_occupancy("M", size),
+                cs.partition_uniform_occupancy("M", size))
+    else:
+        f, c = ft.flatten_ranks("M", "K"), cs.flatten_ranks("M", "K")
+    assert_same_tree(f, c)

@@ -1,7 +1,7 @@
 """Einsum parser + dense oracle tests (paper Sec. 2.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core.einsum import (BinOp, Einsum, Literal, Semiring, Take,
                                TensorAccess, dense_reference, parse_einsum)

@@ -1,7 +1,7 @@
 """Unit + property tests for the fibertree engine (paper Sec. 2.1/3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core.fibertree import Fiber, FTensor
 

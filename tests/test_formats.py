@@ -1,0 +1,180 @@
+"""Coverage for core/formats.py: reference lowerings (CSR / CSC / COO /
+bitmap / linked lists) round-trip against dense, and touch_bytes /
+footprint accounting for U / C / B rank formats."""
+import numpy as np
+import pytest
+
+from repro.core.fibertree import FTensor
+from repro.core.formats import (CSR, algorithmic_min_traffic, subtree_bytes,
+                                tensor_bytes, to_bitmap, to_coo, to_csc,
+                                to_csr, to_linked_lists, touch_bytes)
+from repro.core.spec import FormatSpec, RankFormat, TensorFormat
+
+
+def _mat(seed=0, m=6, n=8, density=0.4):
+    rng = np.random.default_rng(seed)
+    return rng.random((m, n)) * (rng.random((m, n)) < density)
+
+
+def _ft(a, name="A", ranks=("M", "N")):
+    return FTensor.from_dense(name, list(ranks), a)
+
+
+# ---------------------------------------------------------------------- #
+# reference lowerings round-trip against dense
+# ---------------------------------------------------------------------- #
+def test_csr_roundtrip():
+    a = _mat(1)
+    csr = to_csr(_ft(a))
+    assert csr.nnz == int(np.count_nonzero(a))
+    back = np.zeros_like(a)
+    for r in range(a.shape[0]):
+        for p in range(csr.indptr[r], csr.indptr[r + 1]):
+            back[r, csr.indices[p]] = csr.data[p]
+    assert np.array_equal(back, a)
+    # indptr is monotone and covers all of data
+    assert np.all(np.diff(csr.indptr) >= 0)
+    assert csr.indptr[-1] == csr.nnz
+
+
+def test_csc_is_csr_of_transpose():
+    a = _mat(2)
+    csc = to_csc(_ft(a))
+    csr_t = to_csr(_ft(a.T, ranks=("N", "M")))
+    assert np.array_equal(csc.indptr, csr_t.indptr)
+    assert np.array_equal(csc.indices, csr_t.indices)
+    assert np.array_equal(csc.data, csr_t.data)
+
+
+def test_coo_roundtrip():
+    a = _mat(3)
+    pts, vals = to_coo(_ft(a))
+    back = np.zeros_like(a)
+    back[pts[:, 0], pts[:, 1]] = vals
+    assert np.array_equal(back, a)
+    # flattened tuple coordinates expand to full points
+    fl = _ft(a).flatten_ranks("M", "N")
+    pts2, vals2 = to_coo(fl)
+    assert pts2.shape == pts.shape
+    back2 = np.zeros_like(a)
+    back2[pts2[:, 0], pts2[:, 1]] = vals2
+    assert np.array_equal(back2, a)
+
+
+def test_coo_empty():
+    pts, vals = to_coo(_ft(np.zeros((3, 4))))
+    assert pts.shape == (0, 2) and vals.shape == (0,)
+
+
+def test_bitmap_roundtrip():
+    a = _mat(4)
+    mask, packed = to_bitmap(_ft(a))
+    assert mask.sum() == np.count_nonzero(a)
+    back = np.zeros_like(a)
+    back[mask] = packed
+    assert np.array_equal(back, a)
+
+
+def test_linked_lists_roundtrip():
+    a = _mat(5)
+    ll = to_linked_lists(_ft(a))
+    assert ll.nnz == int(np.count_nonzero(a))
+    back = np.zeros_like(a)
+    for r, head in enumerate(ll.heads):
+        p = int(head)
+        while p != -1:
+            c, v, nxt = ll.nodes[p]
+            back[r, c] = v
+            p = nxt
+    assert np.array_equal(back, a)
+    # empty rows have no list
+    empty_rows = ~np.any(a != 0, axis=1)
+    assert np.all(ll.heads[empty_rows] == -1)
+
+
+# ---------------------------------------------------------------------- #
+# byte accounting for U / C / B rank formats
+# ---------------------------------------------------------------------- #
+def _fmt(kind, cbits=32, pbits=64, fhbits=0):
+    return TensorFormat("t", {
+        "M": RankFormat(format="C", cbits=32, pbits=32),
+        "N": RankFormat(format=kind, cbits=cbits, pbits=pbits,
+                        fhbits=fhbits),
+    })
+
+
+def test_touch_bytes_compressed():
+    f = _fmt("C")
+    assert touch_bytes(f, "N", "coord") == 4.0
+    assert touch_bytes(f, "N", "payload") == 8.0
+    assert touch_bytes(f, "N", "elem") == 12.0
+
+
+def test_touch_bytes_uncompressed_coords_free():
+    f = _fmt("U")
+    assert touch_bytes(f, "N", "coord") == 0.0    # positional
+    assert touch_bytes(f, "N", "payload") == 8.0
+    assert touch_bytes(f, "N", "elem") == 8.0
+
+
+def test_touch_bytes_bitmap_coords_one_bit():
+    """B ranks store coordinates as a bitmask: touching one coordinate
+    moves one bit, matching subtree_bytes' shape/8 mask accounting."""
+    f = _fmt("B")
+    assert touch_bytes(f, "N", "coord") == 1 / 8
+    assert touch_bytes(f, "N", "elem") == 8 + 1 / 8
+
+
+def test_touch_bytes_unknown_rank_defaults():
+    f = TensorFormat("t", {})
+    assert touch_bytes(f, "Q", "coord") == 4.0    # RankFormat defaults
+    assert touch_bytes(f, "Q", "payload") == 4.0
+    with pytest.raises(ValueError):
+        touch_bytes(f, "Q", "banana")
+
+
+def test_tensor_bytes_c_format_counts_occupancy():
+    a = np.zeros((4, 8))
+    a[1, :3] = 1.0
+    a[3, 5] = 2.0
+    ft = _ft(a)
+    f = _fmt("C", cbits=32, pbits=64)
+    # M rank: 2 coords * 4B + 2 fiber refs * 4B; N rank: 4 coords * 4B
+    # + 4 payloads * 8B
+    assert tensor_bytes(ft, f) == 2 * 4 + 2 * 4 + 4 * 4 + 4 * 8
+
+
+def test_tensor_bytes_u_format_counts_shape():
+    a = np.zeros((4, 8))
+    a[1, :3] = 1.0
+    f = _fmt("U", pbits=64)
+    # uncompressed N fibers store all 8 positions regardless of occupancy
+    assert tensor_bytes(_ft(a), f) == 1 * 4 + 1 * 4 + 8 * 8
+
+
+def test_tensor_bytes_b_format_adds_bitmask():
+    a = np.zeros((4, 8))
+    a[1, :3] = 1.0
+    f = _fmt("B", pbits=64)
+    # bitmap: shape/8 bytes of mask + packed payloads only
+    assert tensor_bytes(_ft(a), f) == 1 * 4 + 1 * 4 + 8 / 8 + 3 * 8
+
+
+def test_subtree_bytes_leaf_payload():
+    a = _mat(6)
+    ft = _ft(a)
+    f = _fmt("C")
+    leaf = ft.root.payloads[0].payloads[0]
+    assert subtree_bytes(ft, f, leaf, 1) == 8.0
+
+
+def test_algorithmic_min_traffic_sums_tensors():
+    a, b = _mat(7), _mat(8)
+    fa, fb = _ft(a, "A"), _ft(b, "B")
+    out = _ft(a * 0 + (a != 0), "Z")
+    fmt = FormatSpec()
+    got = algorithmic_min_traffic({"A": fa, "B": fb}, out, fmt)
+    want = (tensor_bytes(fa, fmt.default("A"))
+            + tensor_bytes(fb, fmt.default("B"))
+            + tensor_bytes(out, fmt.default("Z")))
+    assert got == want

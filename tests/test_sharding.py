@@ -38,7 +38,7 @@ def test_param_pspec_indivisible_stays_replicated():
 
 
 def test_embedding_path_aware():
-    mesh = jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 4), ("model", 4)))
     params = {"embed": {"tok": jnp.zeros((1024, 64))},
               "blocks": {"w": jnp.zeros((64, 256))}}
     specs = S.param_pspecs(params, mesh)
@@ -47,7 +47,7 @@ def test_embedding_path_aware():
 
 
 def test_divisibility_fallback_in_rules():
-    mesh = jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 4), ("model", 4)))
     rules = AxisRules({"batch": ("data",), "heads": ("model",)})
     # 6 heads % 4 != 0 -> replicated, batch 8 % 4 == 0 -> sharded
     sp = spec_for((8, 6), ("batch", "heads"), mesh=mesh)
@@ -90,7 +90,7 @@ def test_compile_mapping_unbound_spatial_rank_raises():
 # ---------------------------------------------------------------------- #
 def test_cache_pspecs_shard_kv_seq():
     import repro.configs as C
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     cfg = C.get_smoke("qwen3-14b")
     specs = S.cache_pspecs(cfg, batch=4, max_len=64, mesh=mesh)
     # [L, b, s, kv, h]: batch over pod(data), seq over (data, model)
