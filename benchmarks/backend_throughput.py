@@ -69,6 +69,21 @@ def _measure_python(plan, a: CSF, b: CSF, n: int) -> Tuple[float, int, int]:
     return dt, int(ci.compute_counts[("Z", "mul")]), out.nnz
 
 
+def _measure_analytic(plan, a: CSF, b: CSF, n: int
+                      ) -> Tuple[float, int, int]:
+    """Modeled (not executed) multiplies per second of wall time: the
+    calibration scan dominates, the propagation itself is closed-form."""
+    from repro.core.analytic import AnalyticBackend
+
+    fa, fb = a.to_ftensor(), b.to_ftensor()
+    ci = CollectingInstr()
+    t0 = time.time()
+    AnalyticBackend(fallback=False).execute(
+        plan, {"A": fa, "B": fb}, {"m": n, "k": n, "n": n}, instr=ci)
+    dt = time.time() - t0
+    return dt, int(ci.compute_counts[("Z", "mul")]), 0
+
+
 def bench(sizes: Optional[List[int]] = None, backend: str = "both",
           py_max_size: int = PY_MAX_SIZE, density: float = DENSITY
           ) -> List[Dict]:
@@ -88,6 +103,8 @@ def bench(sizes: Optional[List[int]] = None, backend: str = "both",
             runs.append(("vector", _measure_vector(plan, a, b)))
         if backend in ("python", "both") and n <= py_max_size:
             runs.append(("python", _measure_python(plan, a, b, n)))
+        if backend == "analytic":
+            runs.append(("analytic", _measure_analytic(plan, a, b, n)))
         for bname, (dt, muls, out_nnz) in runs:
             records.append({
                 "backend": bname, "size": n, "density": density,
@@ -152,7 +169,7 @@ def main() -> None:
     ap.add_argument("--record", action="store_true",
                     help=f"rewrite {BENCH_JSON.name}")
     ap.add_argument("--backend", default="both",
-                    choices=["python", "vector", "both"])
+                    choices=["python", "vector", "analytic", "both"])
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sizes", type=str, default=None,
                     help="comma-separated sizes override")

@@ -1,0 +1,137 @@
+"""DSE throughput benchmark: sweep points evaluated per second.
+
+Runs the Gamma FiberCache-capacity sweep (the paper's Sec.-8 workflow,
+``examples/design_space_study.py``) through the DSE engine with each
+execution backend and reports **points/sec** -- the metric that decides
+whether a real design-space exploration (thousands of configurations)
+is feasible.
+
+The analytic backend evaluates the full sweep; the execution-based
+backends ('vector' falls back to the Python oracle on Gamma's
+partitioned plans, so both are interpreter-speed here) are measured on
+a small prefix of the sweep and reported at their per-point rate.
+
+``python -m benchmarks.dse_sweep --record`` rewrites BENCH_dse.json,
+the trajectory baseline (acceptance bar: analytic >= 100x vector).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.dse import DesignSpace, SweepEngine, pareto_front
+
+CAPACITIES_MB = [0.001, 0.002, 0.003, 0.005, 0.008, 0.013, 0.02, 0.05,
+                 0.1, 0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 6.0]
+SMOKE_CAPACITIES_MB = [0.002, 3.0]
+EXEC_MAX_POINTS = 2          # execution-backend prefix (interpreter speed)
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_dse.json"
+
+
+def workload(seed: int = 0, m: int = 96, k: int = 96, n: int = 96,
+             da: float = 0.12, db: float = 0.12):
+    rng = np.random.default_rng(seed)
+    a = rng.random((k, m)) * (rng.random((k, m)) < da)
+    b = rng.random((k, n)) * (rng.random((k, n)) < db)
+    return {"A": a, "B": b}, {"m": m, "k": k, "n": n}
+
+
+def fibercache_space(capacities: List[float]) -> DesignSpace:
+    return DesignSpace("gamma", axes={"fibercache_mb": capacities})
+
+
+def _measure(backend: str, capacities: List[float],
+             inputs, shapes) -> Dict:
+    points = fibercache_space(capacities).grid()
+    eng = SweepEngine(inputs, shapes, backend=backend)
+    t0 = time.perf_counter()
+    results = eng.sweep(points)
+    dt = time.perf_counter() - t0
+    ok = [r for r in results if r.ok]
+    assert len(ok) == len(points), \
+        [r.error for r in results if not r.ok]
+    front = pareto_front(ok)
+    return {
+        "backend": backend,
+        "points": len(points),
+        "seconds": round(dt, 4),
+        "points_per_sec": round(len(points) / dt, 3) if dt else 0.0,
+        "pareto_points": [r.label for r in front],
+        "traffic_range_kb": [round(min(r.dram_bytes for r in ok) / 1e3, 1),
+                             round(max(r.dram_bytes for r in ok) / 1e3, 1)],
+    }
+
+
+def bench(capacities: Optional[List[float]] = None,
+          backend: str = "all",
+          exec_max_points: int = EXEC_MAX_POINTS) -> Dict:
+    capacities = capacities or CAPACITIES_MB
+    inputs, shapes = workload()
+    out: Dict = {"workload": "gamma-fibercache-sweep",
+                 "sweep_axis": {"fibercache_mb": capacities},
+                 "metric": "sweep points per second",
+                 "records": []}
+    wanted = (["analytic", "vector", "python"] if backend == "all"
+              else [backend])
+    for bk in wanted:
+        caps = capacities if bk == "analytic" \
+            else capacities[:exec_max_points]
+        out["records"].append(_measure(bk, caps, inputs, shapes))
+    by = {r["backend"]: r for r in out["records"]}
+    if "analytic" in by:
+        out["analytic_rate"] = by["analytic"]["points_per_sec"]
+    if "analytic" in by and "vector" in by:
+        vr = by["vector"]["points_per_sec"]
+        out["vector_rate"] = vr
+        out["speedup_analytic_over_vector"] = round(
+            by["analytic"]["points_per_sec"] / vr, 1) if vr else 0.0
+    if "analytic" in by and "python" in by:
+        pr = by["python"]["points_per_sec"]
+        out["python_rate"] = pr
+        out["speedup_analytic_over_python"] = round(
+            by["analytic"]["points_per_sec"] / pr, 1) if pr else 0.0
+    return out
+
+
+def run(backend: Optional[str] = None, smoke: bool = False
+        ) -> List[Tuple[str, float, float]]:
+    """benchmarks.run entry point: CSV rows (name, us, derived)."""
+    caps = SMOKE_CAPACITIES_MB if smoke else CAPACITIES_MB
+    wanted = backend if backend not in (None, "both") else "all"
+    if smoke and wanted == "all":
+        wanted = "analytic"
+    summary = bench(capacities=caps, backend=wanted,
+                    exec_max_points=1 if smoke else EXEC_MAX_POINTS)
+    rows = []
+    for r in summary["records"]:
+        rows.append((f"dse/{r['backend']}/points{r['points']}",
+                     r["seconds"] * 1e6, r["points_per_sec"]))
+    if "speedup_analytic_over_vector" in summary:
+        rows.append(("dse/speedup_analytic_over_vector", 0.0,
+                     summary["speedup_analytic_over_vector"]))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help=f"rewrite {BENCH_JSON.name}")
+    ap.add_argument("--backend", default="all",
+                    choices=["analytic", "vector", "python", "all"])
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    caps = SMOKE_CAPACITIES_MB if args.smoke else CAPACITIES_MB
+    summary = bench(capacities=caps, backend=args.backend)
+    print(json.dumps(summary, indent=2))
+    if args.record:
+        BENCH_JSON.write_text(json.dumps(summary, indent=2) + "\n")
+        print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

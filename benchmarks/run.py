@@ -1,7 +1,7 @@
 """Benchmark harness -- one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13]
-                                           [--backend python|vector]
+                                           [--backend python|vector|analytic]
                                            [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the host
@@ -31,9 +31,10 @@ BENCHES = {
     "kernels": "benchmarks.kernels_bench",
     "roofline": "benchmarks.roofline_lm",
     "backend": "benchmarks.backend_throughput",
+    "dse": "benchmarks.dse_sweep",
 }
 
-SMOKE_BENCHES = ["backend"]
+SMOKE_BENCHES = ["backend", "dse"]
 
 
 def main() -> None:
@@ -42,7 +43,7 @@ def main() -> None:
                     help="comma-separated subset of: "
                     + ",".join(BENCHES))
     ap.add_argument("--backend", type=str, default=None,
-                    choices=["python", "vector", "both"],
+                    choices=["python", "vector", "analytic", "both"],
                     help="execution backend for benchmarks that "
                     "support selection")
     ap.add_argument("--smoke", action="store_true",

@@ -1,61 +1,80 @@
 """Design-space study (the paper's Sec.-8 workflow): sweep point
-changes to an accelerator's TeAAL spec and compare modeled designs.
+changes to an accelerator's TeAAL spec and compare modeled designs --
+now driven by the DSE engine (``repro.dse``), which evaluates sweep
+points through the analytic backend by default: density calibration is
+done once per workload, and every sweep point after that is a
+closed-form evaluation (~100-200x the points/sec of execution-based
+simulation, see BENCH_dse.json).
 
-Two sweeps on the same SpMSpM workload:
-  1. Gamma's FiberCache capacity (locality vs area),
+Three studies on the same SpMSpM workload:
+  1. Gamma's FiberCache capacity (locality vs area) + Pareto frontier,
   2. Gamma's merger radix (swizzle throughput vs comparator area),
-then the OuterSPACE-vs-Gamma-vs-ExTensor cross-design comparison --
+  3. the OuterSPACE-vs-Gamma-vs-ExTensor cross-design comparison --
 all from declarative specs, no simulator code written.
 
-    PYTHONPATH=src python examples/design_space_study.py
+    PYTHONPATH=src python examples/design_space_study.py [--backend B]
 """
+import argparse
+
 import numpy as np
 
-from repro.accelerators import extensor, gamma, outerspace
-from repro.core.generator import CascadeSimulator
+from repro.dse import DesignPoint, DesignSpace, SweepEngine, pareto_front
 
 
 def workload(seed=0, m=96, k=96, n=96, da=0.12, db=0.12):
     rng = np.random.default_rng(seed)
     a = rng.random((k, m)) * (rng.random((k, m)) < da)
     b = rng.random((k, n)) * (rng.random((k, n)) < db)
-    return a, b, {"m": m, "k": k, "n": n}
-
-
-def run(spec, a, b, shapes, params=None):
-    sim = CascadeSimulator(spec, params=params)
-    return sim.run({"A": a, "B": b}, shapes).report
+    return {"A": a, "B": b}, {"m": m, "k": k, "n": n}
 
 
 def main() -> None:
-    a, b, shapes = workload()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="analytic",
+                    choices=["analytic", "vector", "python"],
+                    help="evaluation engine (analytic = closed-form)")
+    args = ap.parse_args()
 
-    print("=== sweep 1: Gamma FiberCache capacity ===")
+    inputs, shapes = workload()
+    engine = SweepEngine(inputs, shapes, backend=args.backend)
+
+    print(f"=== sweep 1: Gamma FiberCache capacity "
+          f"[backend={args.backend}] ===")
     print("  (below ~0.005 MB the B rows stop fitting: traffic rises)")
-    for mb in (0.001, 0.002, 0.005, 3.0):
-        rep = run(gamma.spec(fibercache_mb=mb), a, b, shapes)
-        print(f"  fibercache={mb:5.3f} MB  time={rep.seconds:.3e}s "
-              f"traffic={rep.dram_bytes / 1e3:8.1f} KB "
-              f"energy={rep.energy_pj / 1e6:7.2f} uJ")
+    space = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.001, 0.002, 0.005, 0.02, 0.25, 3.0]})
+    results = engine.sweep(space.grid())
+    for r in results:
+        print("  " + r.row())
+    front = pareto_front([r for r in results if r.ok])
+    print("  pareto frontier (time/energy/traffic): "
+          + ", ".join(r.label for r in front))
 
     print("\n=== sweep 2: Gamma merger radix ===")
     print("  (radix trades comparator area against K1 round "
           "parallelism: the radix is also the K-fiber group size, "
           "paper Fig. 8a)")
-    for radix in (2, 8, 64):
-        rep = run(gamma.spec(merge_radix=radix), a, b, shapes)
-        print(f"  radix={radix:3d}  time={rep.seconds:.3e}s")
+    radix_space = DesignSpace("gamma", axes={"merge_radix": [2, 8, 64]})
+    for r in engine.sweep(radix_space.grid()):
+        print("  " + r.row())
 
     print("\n=== cross-design comparison (same workload) ===")
-    designs = [("OuterSPACE", outerspace.spec(), None),
-               ("Gamma", gamma.spec(), None),
-               ("ExTensor", extensor.spec(), extensor.DEFAULT_PARAMS)]
-    for name, spec, params in designs:
-        rep = run(spec, a, b, shapes, params)
-        bn = max(rep.blocks, key=lambda blk: blk.seconds)
-        print(f"  {name:11s} time={rep.seconds:.3e}s "
-              f"traffic={rep.dram_bytes / 1e3:8.1f} KB "
-              f"bottleneck={bn.bottleneck}")
+    designs = [DesignPoint.make("outerspace"),
+               DesignPoint.make("gamma"),
+               DesignPoint.make("extensor")]
+    results = engine.sweep(designs)
+    for r in results:
+        note = ""
+        if r.ok and r.fallback_reasons:
+            note = ("  [oracle fallback: "
+                    + "; ".join(f"{k}: {v}"
+                                for k, v in r.fallback_reasons.items())
+                    + "]")
+        print("  " + r.row() + note)
+    front = pareto_front([r for r in results if r.ok])
+    print("  pareto frontier: " + ", ".join(r.label for r in front))
+    print(f"\n  {engine.points_evaluated} points evaluated, "
+          f"{engine.plan_cache_hits} plan-cache hits")
 
 
 if __name__ == "__main__":

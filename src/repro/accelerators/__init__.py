@@ -4,7 +4,7 @@ Each module exposes ``spec(**params) -> AcceleratorSpec`` mirroring the
 published design (Figures 3, 8, 12; hardware parameters from Table 5),
 plus the Table 2 cascade zoo in ``zoo``.  Every module also exposes
 ``simulate(inputs, var_shapes, ..., backend=...)`` threading the
-pluggable execution backend ('python' | 'vector', see
+pluggable execution backend ('python' | 'vector' | 'analytic', see
 repro.core.iteration.ExecutorBackend) through to the simulator.
 """
 from typing import Any, Dict, Optional

@@ -289,7 +289,8 @@ def simulate(inputs, var_shapes, variant: str = "graphicionado",
              **spec_kw):
     """Run one of the graph-accelerator variants; delegates to
     repro.accelerators.simulate (``backend`` selects the execution
-    engine: 'python' oracle | 'vector' columnar CSF)."""
+    engine: 'python' oracle | 'vector' columnar CSF | 'analytic'
+    closed-form density model)."""
     from repro.accelerators import simulate as _simulate
 
     return _simulate(variant, inputs, var_shapes, params=params,

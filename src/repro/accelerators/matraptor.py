@@ -119,7 +119,8 @@ def simulate(inputs, var_shapes, params=None, backend=None,
              model=True, semiring=None, **spec_kw):
     """Run this design on real tensors; delegates to
     repro.accelerators.simulate (``backend`` selects the execution
-    engine: 'python' oracle | 'vector' columnar CSF)."""
+    engine: 'python' oracle | 'vector' columnar CSF | 'analytic'
+    closed-form density model)."""
     from repro.accelerators import simulate as _simulate
 
     return _simulate("matraptor", inputs, var_shapes, params=params,

@@ -17,7 +17,7 @@ components; cascade time = sum over blocks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .mapping import EinsumPlan
 from .spec import AcceleratorSpec
@@ -44,6 +44,36 @@ class CascadeDAG:
 
     def is_intermediate(self, tensor: str) -> bool:
         return tensor in self.intermediates
+
+
+def mapping_signature(spec: AcceleratorSpec,
+                      params: Optional[Dict[str, int]] = None) -> str:
+    """Canonical signature of everything that determines the lowered
+    plans and exec-form tensor structure: the einsum cascade, rank
+    orders, and per-Einsum mapping directives (with partition sizes),
+    plus any symbolic-size params.
+
+    Format / architecture / binding sections are deliberately excluded:
+    sweeping them (FiberCache capacity, merger radix as a pure arch
+    attribute, DRAM bandwidth, ...) must share plan memoization and
+    density-calibration cache entries in the DSE engine.
+    """
+    parts: List[str] = []
+    parts.append("decl:" + repr(sorted(
+        (t, tuple(r)) for t, r in spec.einsum.declaration.items())))
+    parts.append("expr:" + repr([str(e) for e in spec.einsum.expressions]))
+    parts.append("sr:" + spec.einsum.semiring.name)
+    parts.append("order:" + repr(sorted(
+        (t, tuple(r)) for t, r in spec.mapping.rank_order.items())))
+    for name in sorted(spec.mapping.per_einsum):
+        em = spec.mapping.per_einsum[name]
+        st = em.spacetime
+        parts.append(f"{name}:loop={em.loop_order!r}"
+                     f":space={st.space if st else None!r}"
+                     f":time={st.time if st else None!r}"
+                     f":part={sorted((repr(k), [str(d) for d in v]) for k, v in em.partitioning.items())!r}")
+    parts.append("params:" + repr(sorted((params or {}).items())))
+    return "|".join(parts)
 
 
 def _temporal_prefix(plan: EinsumPlan) -> Tuple[str, ...]:

@@ -128,6 +128,40 @@ class StorageLevel:
             if dirty:
                 self._drain_one(osize, old_key)
 
+    def touch_stat(self, key: Any, nbytes: float, rw: str, n: int,
+                   unique: int) -> None:
+        """Statistical residency for aggregate touches that carry a
+        distinct-element hint (the analytic backend): ``unique`` cold
+        misses, plus capacity misses on the reuse accesses when the
+        touched footprint exceeds this level's capacity -- the
+        Sparseloop-style closed-form a path-exact LRU cannot provide
+        from aggregate events.  ``unique == 0`` means the data is
+        produced on chip (read-modify of freshly written output): pure
+        bandwidth accesses, no backing traffic."""
+        self.access_bytes += nbytes * n
+        if rw == "r":
+            self.reads += n
+        else:
+            self.writes += n
+        unique = max(0, min(int(unique), n))
+        if unique == 0 or nbytes <= 0:
+            return
+        footprint = unique * nbytes
+        misses = float(unique)                       # compulsory
+        if footprint > self.capacity_bytes and n > unique:
+            # streaming reuse beyond capacity: each reuse access misses
+            # with the fraction of the working set not resident
+            misses += (n - unique) * (1.0 - self.capacity_bytes / footprint)
+        self.fills += int(round(misses))
+        self.fill_bytes += misses * nbytes
+        if rw == "r":
+            self._backing_access(misses * nbytes, "r", key)
+        else:
+            # written data eventually drains through the backing store
+            self.drains += unique
+            self.drain_bytes += footprint
+            self._backing_access(footprint, "w", key)
+
     def access(self, nbytes: float, rw: str, key: Any = None) -> None:
         """Entry point when a *child* level fills/drains through us."""
         self.touch(key if key is not None else object(), nbytes, rw,
@@ -360,7 +394,8 @@ class EinsumModel:
             self.seq.add(self.spatial_key(), n)
 
     def on_touch(self, tensor: str, rank: str, path: Tuple, kind: str,
-                 rw: str, n: int = 1) -> None:
+                 rw: str, n: int = 1,
+                 unique: Optional[int] = None) -> None:
         fmt = self._fmt(tensor)
         nbytes = touch_bytes(fmt, rank, kind)
         chain = self.chains.get((tensor, kind))
@@ -377,11 +412,16 @@ class EinsumModel:
         lvl = chain[0]
         sb = lvl.binding
         if n > 1 or not path:
-            # aggregate touch (vector backend): no per-element path, so
-            # residency is modeled at (rank, kind) granularity -- counts
-            # are exact, locality is approximate.
-            lvl.touch((tensor, rank, kind), nbytes, rw,
-                      fill_bytes=nbytes, n=n)
+            # aggregate touch: no per-element path.  With a
+            # distinct-element hint (analytic backend) residency is
+            # estimated statistically; without one (vector backend)
+            # it degrades to (rank, kind)-granular keys -- counts are
+            # exact, locality is approximate either way.
+            if unique is not None:
+                lvl.touch_stat((tensor, rank, kind), nbytes, rw, n, unique)
+            else:
+                lvl.touch((tensor, rank, kind), nbytes, rw,
+                          fill_bytes=nbytes, n=n)
             return
         if sb.style == "eager":
             # residency granule: the subtree under the binding rank
@@ -633,9 +673,9 @@ class PerformanceModel(Instrumentation):
             self.dram.total_bytes - self._dram_mark
         self._cur = None
 
-    def touch(self, einsum, tensor, rank, path, kind, rw, n=1):
+    def touch(self, einsum, tensor, rank, path, kind, rw, n=1, unique=None):
         if self._cur is not None:
-            self._cur.on_touch(tensor, rank, path, kind, rw, n)
+            self._cur.on_touch(tensor, rank, path, kind, rw, n, unique)
 
     def advance(self, einsum, rank, n=1):
         # n > 1 (aggregate) epochs with no interleaved touches collapse

@@ -15,7 +15,7 @@ runs) is emitted to the bound Merger component.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -87,16 +87,27 @@ def _innermost_var_order(plan: EinsumPlan, tensor: str) -> List[str]:
     return seen
 
 
-def merge_events(stored: FTensor, exec_var_order: Sequence[str]
-                 ) -> List[Tuple[int, int]]:
-    """(elements, lists) merge work needed to swizzle ``stored`` (in its
-    declared form) into an order consistent with ``exec_var_order``."""
-    stored_vars = [r.lower() for r in stored.ranks]
+def merge_prefix(stored_vars: Sequence[str],
+                 exec_var_order: Sequence[str]) -> Optional[int]:
+    """First discordant level between a stored rank order and the
+    consuming Einsum's execution var order, or None when concordant
+    (no online swizzle / merger work needed)."""
     p = 0
     while (p < len(stored_vars) and p < len(exec_var_order)
            and stored_vars[p] == exec_var_order[p]):
         p += 1
     if p >= len(stored_vars) - 1:
+        return None
+    return p
+
+
+def merge_events(stored: FTensor, exec_var_order: Sequence[str]
+                 ) -> List[Tuple[int, int]]:
+    """(elements, lists) merge work needed to swizzle ``stored`` (in its
+    declared form) into an order consistent with ``exec_var_order``."""
+    stored_vars = [r.lower() for r in stored.ranks]
+    p = merge_prefix(stored_vars, exec_var_order)
+    if p is None:
         return []                             # concordant (or trivial)
 
     events: List[Tuple[int, int]] = []
@@ -127,6 +138,10 @@ def merge_events(stored: FTensor, exec_var_order: Sequence[str]
 class SimResult:
     tensors: Dict[str, FTensor]              # all tensors, declared form
     report: Optional[Report]                 # None when model disabled
+    #: einsum -> reason, for Einsums the selected backend executed
+    #: through the Python oracle instead of its fast path (empty when
+    #: every Einsum ran native)
+    fallback_reasons: Dict[str, str] = field(default_factory=dict)
 
     def __getitem__(self, name: str) -> FTensor:
         return self.tensors[name]
@@ -145,13 +160,16 @@ class CascadeSimulator:
                  semiring: Optional[Semiring] = None,
                  extra_instr: Optional[Instrumentation] = None,
                  model: bool = True,
-                 backend: "str | ExecutorBackend | None" = None):
+                 backend: "str | ExecutorBackend | None" = None,
+                 plans: Optional[Dict[str, EinsumPlan]] = None):
         self.spec = spec
         self.backend: ExecutorBackend = get_backend(backend)
         self.resolver = MappingResolver(spec, params)
         self.semiring = semiring or spec.einsum.semiring
         self.dag = CascadeDAG.from_spec(spec)
-        self.plans: Dict[str, EinsumPlan] = {
+        # `plans` lets a sweep engine reuse memoized lowering across
+        # points whose mapping signature is identical (cascade.py)
+        self.plans: Dict[str, EinsumPlan] = plans if plans is not None else {
             e.output.tensor: self.resolver.plan(e.output.tensor)
             for e in spec.einsum.expressions
         }
@@ -207,6 +225,7 @@ class CascadeSimulator:
         store: Dict[str, FTensor] = {
             name: self._to_ftensor(name, v) for name, v in inputs.items()}
         shapes = self._var_shapes(store, var_shapes)
+        fallbacks: Dict[str, str] = {}
 
         for e in self.spec.einsum.expressions:
             out_name = e.output.tensor
@@ -218,21 +237,42 @@ class CascadeSimulator:
             if (not e.output.indices and isinstance(e.expr, _TA)
                     and not e.expr.indices):
                 store[out_name] = store[e.expr.tensor].copy(out_name)
+                notify = getattr(self.backend, "notify_copy", None)
+                if notify is not None:
+                    notify(out_name, e.expr.tensor)
                 continue
 
             missing = [t for t in e.input_names if t not in store]
             if missing:
                 raise KeyError(f"einsum {out_name}: missing inputs {missing}")
 
-            exec_forms = self.resolver.transform_all(
+            # stats-only backends (analytic) can skip the data transform
+            # entirely once their calibration cache covers this Einsum
+            prepare = getattr(self.backend, "prepare_inputs", None)
+            need_data = True
+            if prepare is not None and out_name not in store:
+                need_data = prepare(plan,
+                                    {t: store[t] for t in e.input_names},
+                                    shapes)
+            exec_forms = (self.resolver.transform_all(
                 out_name, {t: store[t] for t in e.input_names})
+                if need_data else {})
 
             # online rank swizzles of intermediates -> merger work
+            estimate = getattr(self.backend, "merge_estimate", None)
             for t in e.input_names:
-                if self.dag.is_intermediate(t):
-                    order = _innermost_var_order(plan, t)
-                    for elements, lists in merge_events(store[t], order):
-                        self.instr.merge(out_name, t, elements, lists)
+                if not self.dag.is_intermediate(t):
+                    continue
+                order = _innermost_var_order(plan, t)
+                stored_ranks = list(store[t].ranks)
+                p = merge_prefix([r.lower() for r in stored_ranks], order)
+                if p is None:
+                    continue
+                events = merge_events(store[t], order)
+                if not events and estimate is not None:
+                    events = estimate(t, stored_ranks, p, shapes) or []
+                for elements, lists in events:
+                    self.instr.merge(out_name, t, elements, lists)
 
             out_initial = None
             if out_name in store:
@@ -240,7 +280,7 @@ class CascadeSimulator:
                 out_initial = self.resolver.transform_tensor(
                     out_name, store[out_name])
 
-            if self.model is not None:
+            if self.model is not None and exec_forms:
                 self.model.register_exec_tensors(out_name, exec_forms)
 
             strategy, leader = self._isect_config(out_name)
@@ -248,6 +288,9 @@ class CascadeSimulator:
                 plan, exec_forms, shapes, semiring=self.semiring,
                 instr=self.instr, out_initial=out_initial,
                 isect_strategy=strategy, isect_leader=leader)
+            if getattr(self.backend, "last_path", None) == "fallback":
+                fallbacks[out_name] = getattr(
+                    self.backend, "last_fallback_reason", None) or ""
 
             declared_order = (self.spec.mapping.rank_order.get(out_name)
                               or self.spec.einsum.declaration[out_name])
@@ -262,7 +305,10 @@ class CascadeSimulator:
 
         report = (evaluate(self.spec, self.plans, self.model)
                   if self.model is not None else None)
-        return SimResult(tensors=store, report=report)
+        if report is not None:
+            report.fallback_reasons = dict(fallbacks)
+        return SimResult(tensors=store, report=report,
+                         fallback_reasons=dict(fallbacks))
 
     # ------------------------------------------------------------------ #
     def run_iterative(self, inputs: Dict[str, Any],
@@ -277,6 +323,12 @@ class CascadeSimulator:
         tensor names (e.g. {'A0': 'A1', 'P0': 'P1'}); iteration stops
         when tensor ``done_when_empty`` has no nonzeros or after
         ``max_iters``."""
+        if not getattr(self.backend, "materializes", True):
+            raise ValueError(
+                f"backend {self.backend.name!r} materializes no output "
+                "data: carried tensors and the done_when_empty test "
+                "would read empty results -- use an execution backend "
+                "('python' or 'vector') for iterative cascades")
         state = dict(inputs)
         result: Optional[SimResult] = None
         iters = 0

@@ -638,10 +638,32 @@ class ExecutorBackend:
     (plan, tensors) inputs.  ``PythonBackend`` is the per-element
     correctness oracle; ``VectorBackend`` (core/vectorized.py) runs
     per-rank co-iteration over columnar CSF arrays and reports the same
-    action counts in aggregate (see DESIGN.md).
+    action counts in aggregate; ``AnalyticBackend`` (core/analytic.py)
+    relaxes the contract -- it models the counts statistically and
+    returns an *empty* output tensor, trading data fidelity for
+    closed-form speed (see DESIGN.md).
+
+    Optional protocol extensions the generator probes with getattr:
+
+      * ``last_path`` / ``last_fallback_reason`` -- set after each
+        ``execute`` when the backend transparently fell back to the
+        oracle, so the run result can surface silent fallbacks;
+      * ``prepare_inputs(plan, tensors, var_shapes) -> bool`` -- False
+        lets the generator skip ``transform_all`` (analytic
+        calibration-cache fast path);
+      * ``merge_estimate(tensor, stored_ranks, prefix_depth,
+        var_shapes)`` -- analytic merger-work events for
+        unmaterialized intermediates;
+      * ``notify_copy(dst, src)`` -- whole-tensor aliases the generator
+        short-circuits, so stats-tracking backends can follow them.
+
+    ``materializes`` is False for backends whose outputs carry no data
+    (analytic): convergence-driven flows (``run_iterative``) must
+    reject them rather than mistake empty outputs for convergence.
     """
 
     name = "abstract"
+    materializes = True
 
     def execute(self, plan: EinsumPlan, tensors: Dict[str, FTensor],
                 var_shapes: Dict[str, int],
@@ -668,7 +690,8 @@ class PythonBackend(ExecutorBackend):
 
 
 def get_backend(backend: "str | ExecutorBackend | None") -> ExecutorBackend:
-    """Resolve a backend selection ('python' | 'vector' | instance)."""
+    """Resolve a backend selection
+    ('python' | 'vector' | 'analytic' | instance)."""
     if backend is None:
         return PythonBackend()
     if isinstance(backend, ExecutorBackend):
@@ -678,5 +701,8 @@ def get_backend(backend: "str | ExecutorBackend | None") -> ExecutorBackend:
     if backend == "vector":
         from .vectorized import VectorBackend
         return VectorBackend()
+    if backend == "analytic":
+        from .analytic import AnalyticBackend
+        return AnalyticBackend()
     raise ValueError(f"unknown execution backend {backend!r} "
-                     f"(expected 'python' or 'vector')")
+                     f"(expected 'python', 'vector' or 'analytic')")

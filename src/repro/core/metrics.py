@@ -62,6 +62,10 @@ class Report:
     energy_pj: float
     energy_breakdown_pj: Dict[str, float]
     action_counts: Dict[str, float]
+    #: einsum -> reason, for Einsums the selected backend silently
+    #: executed through the Python oracle instead of its fast path
+    #: (filled by the generator; empty for PythonBackend runs)
+    fallback_reasons: Dict[str, str] = field(default_factory=dict)
 
     @property
     def dram_bytes(self) -> float:

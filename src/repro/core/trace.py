@@ -24,8 +24,13 @@ class Instrumentation:
     def end_einsum(self, einsum: str) -> None: ...
 
     # storage: element touch. path = coords root->here, kind 'coord'|'payload'
+    # ``unique`` (aggregate emitters only) hints how many *distinct*
+    # elements underlie the n accesses, so storage models can estimate
+    # residency statistically: None = unknown (legacy aggregate
+    # handling), 0 = data already on chip (no cold fills)
     def touch(self, einsum: str, tensor: str, rank: str,
-              path: Tuple, kind: str, rw: str, n: int = 1) -> None: ...
+              path: Tuple, kind: str, rw: str, n: int = 1,
+              unique: "int | None" = None) -> None: ...
 
     # loop rank advanced to a new coordinate (epoch marker for buffets)
     def advance(self, einsum: str, rank: str, n: int = 1) -> None: ...
@@ -65,7 +70,7 @@ class CollectingInstr(Instrumentation):
     advances: Counter = field(default_factory=Counter)
     merges: List[Tuple[str, str, int, int]] = field(default_factory=list)
 
-    def touch(self, einsum, tensor, rank, path, kind, rw, n=1):
+    def touch(self, einsum, tensor, rank, path, kind, rw, n=1, unique=None):
         self.touch_counts[(einsum, tensor, rank, kind, rw)] += n
         if self.record_touches:
             self.touches.append((einsum, tensor, rank, path, kind, rw))

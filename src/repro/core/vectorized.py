@@ -138,6 +138,8 @@ class VectorBackend(ExecutorBackend):
         self._oracle = PythonBackend()
         #: 'vector' or 'fallback' for the most recent execute() call
         self.last_path: Optional[str] = None
+        #: why the most recent execute() fell back (None on the fast path)
+        self.last_fallback_reason: Optional[str] = None
 
     # ------------------------------------------------------------------ #
     def execute(self, plan, tensors, var_shapes, semiring=None, instr=None,
@@ -149,11 +151,13 @@ class VectorBackend(ExecutorBackend):
             csf_out, _ = self._run_vectorized(
                 plan, tensors, semiring, instr, out_initial, isect_strategy)
             self.last_path = "vector"
+            self.last_fallback_reason = None
             return csf_out.to_ftensor()
-        except _Unsupported:
+        except _Unsupported as exc:
             if not self.fallback:
                 raise
             self.last_path = "fallback"
+            self.last_fallback_reason = str(exc)
             ften = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
                     for t, v in tensors.items()}
             return self._oracle.execute(

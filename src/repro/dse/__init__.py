@@ -1,0 +1,22 @@
+"""Design-space exploration over declarative TeAAL specs.
+
+The paper's Section-8 workflow -- sweep point changes to a spec and
+compare modeled designs -- made engine-shaped:
+
+  * ``space``  -- declarative sweep-space construction (grid / random /
+    parameter overrides) producing hashable ``DesignPoint``s;
+  * ``engine`` -- evaluation of points through any execution backend
+    (default: the analytic engine, with memoized plan lowering and a
+    shared per-workload density-calibration cache);
+  * ``pareto`` -- dominance filtering over the modeled objectives
+    (time / energy / DRAM traffic).
+
+``examples/design_space_study.py`` and ``benchmarks/dse_sweep.py`` sit
+on top of this package.
+"""
+from .engine import PointResult, SweepEngine
+from .pareto import dominates, pareto_front
+from .space import DesignPoint, DesignSpace
+
+__all__ = ["DesignPoint", "DesignSpace", "PointResult", "SweepEngine",
+           "dominates", "pareto_front"]

@@ -1,0 +1,300 @@
+"""AnalyticBackend contract (see DESIGN.md "analytic backend"):
+
+  * calibrated mode reproduces the oracle's aggregate action counts
+    *exactly* on dense-rank / single-driver plans;
+  * on random SpMSpM, intersection counts (pointer steps, matches) are
+    within 10% of PythonBackend totals;
+  * plans the analytic walk covers (including Gamma's partitioned,
+    take-based, leader-follower cascade) run natively -- no oracle
+    fallback -- and produce a plausible Report;
+  * unsupported plans fall back per Einsum with the reason surfaced.
+"""
+import numpy as np
+import pytest
+
+from repro.accelerators import extensor, gamma
+from repro.accelerators.zoo import ZOO
+from repro.core.analytic import AnalyticBackend
+from repro.core.density import TensorDensity, expected_distinct
+from repro.core.fibertree import FTensor
+from repro.core.generator import CascadeSimulator
+from repro.core.spec import load_spec
+from repro.core.trace import CollectingInstr
+
+COUNTERS = ("touch_counts", "iter_counts", "compute_counts",
+            "isect_steps", "isect_matches", "advances")
+
+
+def _run(spec, inputs, shapes, backend, params=None, model=False):
+    ci = CollectingInstr()
+    sim = CascadeSimulator(spec, params=params, model=model,
+                           extra_instr=ci, backend=backend)
+    res = sim.run(dict(inputs), shapes)
+    return ci, res
+
+
+def assert_counts_exact(spec, inputs, shapes, params=None):
+    ci_p, _ = _run(spec, inputs, shapes, "python", params)
+    ab = AnalyticBackend()
+    ci_a, res = _run(spec, inputs, shapes, ab, params)
+    assert res.fallback_reasons == {}
+    for attr in COUNTERS:
+        assert getattr(ci_p, attr) == getattr(ci_a, attr), \
+            f"{spec.name}: {attr} not exact"
+
+
+# ---------------------------------------------------------------------- #
+# exactness: single-driver and dense-rank plans
+# ---------------------------------------------------------------------- #
+def test_single_driver_reduction_exact(rng, spmat):
+    spec = load_spec({
+        "name": "RowSum",
+        "einsum": {"declaration": {"A": ["M", "K"], "Y": ["M"]},
+                   "expressions": ["Y[m] = A[m, k]"]},
+        "mapping": {}})
+    a = spmat(rng, 24, 24, 0.3)
+    assert_counts_exact(spec, {"A": a}, {"m": 24, "k": 24})
+
+
+def test_dense_rank_broadcast_exact(rng):
+    spec = load_spec({
+        "name": "Bcast",
+        "einsum": {"declaration": {"A": ["N"], "Z": ["M", "N"]},
+                   "expressions": ["Z[m, n] = A[n]"]},
+        "mapping": {}})
+    a = rng.random(12) * (rng.random(12) < 0.5)
+    assert_counts_exact(spec, {"A": a}, {"m": 6, "n": 12})
+
+
+def test_single_driver_three_rank_exact(rng):
+    spec = load_spec({
+        "name": "Contract",
+        "einsum": {"declaration": {"T": ["I", "J", "K"], "Y": ["I"]},
+                   "expressions": ["Y[i] = T[i, j, k]"]},
+        "mapping": {}})
+    t = rng.random((6, 5, 4)) * (rng.random((6, 5, 4)) < 0.4)
+    assert_counts_exact(spec, {"T": t}, {"i": 6, "j": 5, "k": 4})
+
+
+# ---------------------------------------------------------------------- #
+# statistical: SpMSpM intersection counts within 10%
+# ---------------------------------------------------------------------- #
+def test_spmspm_intersection_counts_within_10pct(rng, spmat):
+    M = K = N = 64
+    a, b = spmat(rng, M, K, 0.3), spmat(rng, K, N, 0.3)
+    spec = ZOO["rowwise-spmspm"]()
+    shapes = {"m": M, "k": K, "n": N}
+    ci_p, _ = _run(spec, {"A": a, "B": b}, shapes, "python")
+    ci_a, res = _run(spec, {"A": a, "B": b}, shapes, AnalyticBackend())
+    assert res.fallback_reasons == {}
+    for key in set(ci_p.isect_steps) | set(ci_a.isect_steps):
+        p, an = ci_p.isect_steps[key], ci_a.isect_steps[key]
+        assert abs(an - p) <= 0.10 * max(p, 1), \
+            f"isect_steps {key}: {p} vs {an}"
+    for key in set(ci_p.isect_matches) | set(ci_a.isect_matches):
+        p, an = ci_p.isect_matches[key], ci_a.isect_matches[key]
+        assert abs(an - p) <= 0.10 * max(p, 1), \
+            f"isect_matches {key}: {p} vs {an}"
+    # compute counts ride on the same estimates: keep them honest too
+    for key in set(ci_p.compute_counts) | set(ci_a.compute_counts):
+        p, an = ci_p.compute_counts[key], ci_a.compute_counts[key]
+        assert abs(an - p) <= 0.10 * max(p, 1), \
+            f"compute {key}: {p} vs {an}"
+
+
+def test_sparse_add_union_counts_close(rng, spmat):
+    a, b = spmat(rng, 32, 32, 0.25), spmat(rng, 32, 32, 0.25)
+    spec = ZOO["sparse-add"]()
+    ci_p, _ = _run(spec, {"A": a, "B": b}, {"m": 32, "n": 32}, "python")
+    ci_a, res = _run(spec, {"A": a, "B": b}, {"m": 32, "n": 32},
+                     AnalyticBackend())
+    assert res.fallback_reasons == {}
+    for key in ci_p.iter_counts:
+        p, an = ci_p.iter_counts[key], ci_a.iter_counts[key]
+        assert abs(an - p) <= 0.15 * max(p, 1), f"iterate {key}"
+
+
+# ---------------------------------------------------------------------- #
+# native coverage of the validated designs
+# ---------------------------------------------------------------------- #
+def _workload(rng, n=96, d=0.12):
+    a = rng.random((n, n)) * (rng.random((n, n)) < d)
+    b = rng.random((n, n)) * (rng.random((n, n)) < d)
+    return {"A": a, "B": b}, {"m": n, "k": n, "n": n}
+
+
+def test_gamma_runs_native_with_plausible_counts(rng):
+    """Gamma (partitioned ranks, take(), leader-follower) is exactly
+    the plan class the vector backend cannot cover: the analytic
+    engine must run it natively and land near the oracle."""
+    inputs, shapes = _workload(rng)
+    ab = AnalyticBackend()
+    ci_a, res = _run(gamma.spec(), inputs, shapes, ab, model=True)
+    assert res.fallback_reasons == {}
+    ci_p, res_p = _run(gamma.spec(), inputs, shapes, "python", model=True)
+    mul_p = sum(v for k, v in ci_p.compute_counts.items() if k[1] == "mul")
+    mul_a = sum(v for k, v in ci_a.compute_counts.items() if k[1] == "mul")
+    assert abs(mul_a - mul_p) <= 0.10 * mul_p
+    assert res.report.seconds > 0
+    assert res.report.energy_pj > 0
+    assert res.report.dram_bytes > 0
+
+
+def test_extensor_runs_native_with_plausible_counts(rng):
+    inputs, shapes = _workload(rng)
+    ab = AnalyticBackend()
+    ci_a, res = _run(extensor.spec(), inputs, shapes, ab,
+                     params=extensor.DEFAULT_PARAMS, model=True)
+    assert res.fallback_reasons == {}
+    ci_p, _ = _run(extensor.spec(), inputs, shapes, "python",
+                   params=extensor.DEFAULT_PARAMS, model=True)
+    mul_p = sum(v for k, v in ci_p.compute_counts.items() if k[1] == "mul")
+    mul_a = sum(v for k, v in ci_a.compute_counts.items() if k[1] == "mul")
+    assert abs(mul_a - mul_p) <= 0.10 * mul_p
+
+
+def test_traffic_responds_to_cache_capacity(rng):
+    """The statistical residency model must make DRAM traffic a
+    monotonically non-increasing function of FiberCache capacity --
+    the property the Sec.-8 capacity sweep studies."""
+    inputs, shapes = _workload(rng)
+    traffic = []
+    for mb in (0.001, 0.005, 3.0):
+        _, res = _run(gamma.spec(fibercache_mb=mb), inputs, shapes,
+                      AnalyticBackend(), model=True)
+        traffic.append(res.report.dram_bytes)
+    assert traffic[0] > traffic[-1]
+    assert all(x >= y for x, y in zip(traffic, traffic[1:]))
+
+
+# ---------------------------------------------------------------------- #
+# fallback behavior
+# ---------------------------------------------------------------------- #
+def test_affine_plan_falls_back_with_reason(rng):
+    spec = ZOO["eyeriss-conv"]()
+    inputs = {"I": rng.random((2, 3, 6, 6)) * (rng.random((2, 3, 6, 6)) < .5),
+              "F": rng.random((3, 4, 3, 3))}
+    shapes = {"b": 2, "c": 3, "h": 6, "w": 6, "m": 4, "r": 3, "s": 3,
+              "p": 4, "q": 4}
+    ci_a, res = _run(spec, inputs, shapes, AnalyticBackend())
+    assert "O" in res.fallback_reasons
+    assert "affine" in res.fallback_reasons["O"]
+    # single-einsum fallback executes on real data: outputs are real
+    _, res_p = _run(spec, inputs, shapes, "python")
+    assert np.array_equal(res["O"].to_dense(), res_p["O"].to_dense())
+
+
+def test_fallback_disabled_raises(rng):
+    from repro.core.analytic import _Unsupported
+    spec = ZOO["eyeriss-conv"]()
+    inputs = {"I": rng.random((2, 3, 6, 6)), "F": rng.random((3, 4, 3, 3))}
+    shapes = {"b": 2, "c": 3, "h": 6, "w": 6, "m": 4, "r": 3, "s": 3,
+              "p": 4, "q": 4}
+    with pytest.raises(_Unsupported):
+        _run(spec, inputs, shapes, AnalyticBackend(fallback=False))
+
+
+# ---------------------------------------------------------------------- #
+# cascades: predicted intermediates
+# ---------------------------------------------------------------------- #
+def test_cascade_propagates_predicted_intermediates(rng):
+    """Factorized MTTKRP: the second Einsum consumes an intermediate
+    the analytic engine never materialized; its counts must still be
+    in the oracle's neighborhood."""
+    spec = ZOO["factorized-mttkrp"]()
+    t = rng.random((5, 4, 3)) * (rng.random((5, 4, 3)) < .4)
+    inputs = {"T": t, "A": rng.random((3, 6)), "B": rng.random((4, 6))}
+    shapes = {"i": 5, "j": 4, "k": 3, "r": 6}
+    ci_a, res = _run(spec, inputs, shapes, AnalyticBackend())
+    assert res.fallback_reasons == {}
+    ci_p, _ = _run(spec, inputs, shapes, "python")
+    mul_p = sum(v for k, v in ci_p.compute_counts.items() if k[1] == "mul")
+    mul_a = sum(v for k, v in ci_a.compute_counts.items() if k[1] == "mul")
+    assert mul_a > 0
+    assert abs(mul_a - mul_p) <= 0.35 * max(mul_p, 1)
+
+
+def test_analytic_outputs_are_empty(rng, spmat):
+    """The engine's defining property: no data is ever materialized."""
+    a, b = spmat(rng, 16, 16, 0.3), spmat(rng, 16, 16, 0.3)
+    _, res = _run(ZOO["rowwise-spmspm"](), {"A": a, "B": b},
+                  {"m": 16, "k": 16, "n": 16}, AnalyticBackend())
+    assert res["Z"].nnz == 0
+
+
+def test_iterative_cascades_reject_analytic(rng, spmat):
+    """Empty analytic outputs must not masquerade as convergence."""
+    a, b = spmat(rng, 8, 8, 0.3), spmat(rng, 8, 8, 0.3)
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](),
+                           backend=AnalyticBackend())
+    with pytest.raises(ValueError, match="materializes no output"):
+        sim.run_iterative({"A": a, "B": b}, carry={"A": "Z"},
+                          done_when_empty="Z",
+                          var_shapes={"m": 8, "k": 8, "n": 8})
+
+
+# ---------------------------------------------------------------------- #
+# density models
+# ---------------------------------------------------------------------- #
+def test_calibrated_density_matches_structure(rng, spmat):
+    a = spmat(rng, 20, 30, 0.2)
+    ft = FTensor.from_dense("A", ["M", "K"], a)
+    td = TensorDensity.calibrated(ft)
+    rows = int((a != 0).any(axis=1).sum())
+    nnz = int(np.count_nonzero(a))
+    assert td.levels[0].elems == rows
+    assert td.levels[1].elems == nnz
+    assert td.nnz == nnz
+    assert td.occ(1) == pytest.approx(nnz / rows)
+
+
+def test_statistical_models_match_expectation():
+    n, d = 64, 0.1
+    tu = TensorDensity.uniform("A", ["M", "K"], [n, n], d)
+    th = TensorDensity.hypergeometric("A", ["M", "K"], [n, n],
+                                      n * n * d)
+    for td in (tu, th):
+        assert td.nnz == pytest.approx(n * n * d, rel=1e-6)
+        # P(row nonempty) = 1 - (1-d)^n
+        exp_rows = n * (1 - (1 - d) ** n)
+        assert td.levels[0].elems == pytest.approx(exp_rows, rel=0.05)
+
+
+def test_expected_distinct_properties():
+    assert expected_distinct(100, 0) == 0
+    assert expected_distinct(1, 50) == 1
+    assert expected_distinct(100, 1) == pytest.approx(1.0)
+    # monotone, saturating
+    assert expected_distinct(100, 500) < 100
+    assert expected_distinct(100, 500) > expected_distinct(100, 100)
+
+
+def test_densities_hint_enables_data_free_evaluation():
+    """With declared per-tensor densities the backend models a
+    workload it was never given: true Sparseloop-style what-if."""
+    from repro.core.mapping import MappingResolver
+    spec = ZOO["rowwise-spmspm"]()
+    plan = MappingResolver(spec).plan("Z")
+    ci = CollectingInstr()
+    ab = AnalyticBackend(mode="uniform",
+                         densities={"A": 0.1, "B": 0.1}, fallback=False)
+    out = ab.execute(plan, {}, {"m": 100, "k": 100, "n": 100}, instr=ci)
+    assert out.nnz == 0
+    muls = ci.compute_counts[("Z", "mul")]
+    # E[muls] = M*K*N * dA * dB = 1e6 * 0.01 = 1e4
+    assert muls == pytest.approx(1e4, rel=0.2)
+
+
+def test_uniform_mode_backend_close_on_random(rng, spmat):
+    """The pure-statistical mode (no tensor scan) should still land
+    near the oracle on uniform random inputs."""
+    M = K = N = 48
+    a, b = spmat(rng, M, K, 0.2), spmat(rng, K, N, 0.2)
+    spec = ZOO["rowwise-spmspm"]()
+    shapes = {"m": M, "k": K, "n": N}
+    ci_p, _ = _run(spec, {"A": a, "B": b}, shapes, "python")
+    ci_a, _ = _run(spec, {"A": a, "B": b}, shapes,
+                   AnalyticBackend(mode="uniform"))
+    mul_p = sum(v for k, v in ci_p.compute_counts.items() if k[1] == "mul")
+    mul_a = sum(v for k, v in ci_a.compute_counts.items() if k[1] == "mul")
+    assert abs(mul_a - mul_p) <= 0.30 * mul_p

@@ -108,6 +108,34 @@ def test_partitioned_specs_fall_back():
     assert path == "fallback"
 
 
+def test_fallback_reasons_surfaced(rng, spmat):
+    """The per-Einsum oracle fallback must not be silent: the run
+    result (and Report) records why each Einsum left the fast path,
+    and is empty when the whole cascade ran native."""
+    a, b = spmat(rng, 24, 24, 0.2), spmat(rng, 24, 24, 0.2)
+    shapes = {"m": 24, "k": 24, "n": 24}
+
+    # Rowwise-SpMSpM is the vector backend's canonical workload: it
+    # must run fully vectorized, with no recorded fallbacks.
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](), backend="vector")
+    res = sim.run({"A": a, "B": b}, shapes)
+    assert res.fallback_reasons == {}
+    assert res.report.fallback_reasons == {}
+
+    # Gamma's partitioned plans leave the vector path: both Einsums
+    # surface a reason, mirrored onto the Report.
+    sim = CascadeSimulator(gamma.spec(), backend="vector")
+    res = sim.run({"A": a, "B": b}, shapes)
+    assert set(res.fallback_reasons) == {"T", "Z"}
+    assert all(res.fallback_reasons.values())
+    assert res.report.fallback_reasons == res.fallback_reasons
+
+    # the oracle itself never "falls back"
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](), backend="python")
+    res = sim.run({"A": a, "B": b}, shapes)
+    assert res.fallback_reasons == {}
+
+
 # ---------------------------------------------------------------------- #
 # chunked execution and edge shapes
 # ---------------------------------------------------------------------- #

@@ -1,0 +1,166 @@
+"""Design-space exploration engine: space generation, evaluation,
+caching, parallel sweeps, and Pareto extraction."""
+import numpy as np
+import pytest
+
+from repro.dse import (DesignPoint, DesignSpace, PointResult, SweepEngine,
+                       dominates, pareto_front)
+
+
+def _workload(rng, n=48, d=0.15):
+    a = rng.random((n, n)) * (rng.random((n, n)) < d)
+    b = rng.random((n, n)) * (rng.random((n, n)) < d)
+    return {"A": a, "B": b}, {"m": n, "k": n, "n": n}
+
+
+# ---------------------------------------------------------------------- #
+# space generation
+# ---------------------------------------------------------------------- #
+def test_grid_is_cartesian_product():
+    space = DesignSpace("gamma", axes={"fibercache_mb": [0.5, 3.0],
+                                       "merge_radix": [8, 64]})
+    pts = space.grid()
+    assert len(pts) == len(space) == 4
+    combos = {(p.spec_kwargs["fibercache_mb"], p.spec_kwargs["merge_radix"])
+              for p in pts}
+    assert combos == {(0.5, 8), (0.5, 64), (3.0, 8), (3.0, 64)}
+    # hashable + labeled
+    assert len({hash(p) for p in pts}) == 4
+    assert all(p.label.startswith("gamma(") for p in pts)
+
+
+def test_random_subsample_deterministic():
+    space = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.1 * i for i in range(1, 11)],
+        "merge_radix": [2, 4, 8, 16, 32, 64]})
+    r1 = space.random(5, seed=7)
+    r2 = space.random(5, seed=7)
+    assert r1 == r2
+    assert len(set(r1)) == 5
+
+
+def test_param_axes_and_overrides():
+    space = DesignSpace("extensor", param_axes={"K0": [64, 128]},
+                        base_params={"K1": 1024, "M1": 1024, "M0": 128,
+                                     "N1": 1024, "N0": 128})
+    pts = space.grid()
+    assert len(pts) == 2
+    assert {p.param_dict["K0"] for p in pts} == {64, 128}
+    assert all(p.param_dict["K1"] == 1024 for p in pts)
+    ov = space.overrides([{"params": {"K0": 32}}])
+    assert ov[0].param_dict["K0"] == 32
+
+
+def test_point_builds_spec():
+    pt = DesignPoint.make("gamma", {"fibercache_mb": 1.5})
+    spec = pt.build_spec()
+    comp, _ = spec.arch.find("main", "FiberCache")
+    assert comp.attrs["depth"] == int(1.5 * 1024 * 1024 / 64)
+
+
+# ---------------------------------------------------------------------- #
+# pareto
+# ---------------------------------------------------------------------- #
+class _R:
+    def __init__(self, s, e, d):
+        self.seconds, self.energy_pj, self.dram_bytes = s, e, d
+
+
+def test_dominates():
+    assert dominates((1, 1), (2, 2))
+    assert dominates((1, 2), (1, 3))
+    assert not dominates((1, 3), (2, 1))
+    assert not dominates((1, 1), (1, 1))
+
+
+def test_pareto_front_filters_dominated():
+    rs = [_R(1, 5, 5), _R(2, 2, 2), _R(3, 3, 3), _R(1, 5, 5)]
+    front = pareto_front(rs)
+    assert front == [rs[0], rs[1]]        # rs[2] dominated, rs[3] dup
+
+
+def test_pareto_single_objective():
+    rs = [_R(3, 0, 0), _R(1, 0, 0), _R(2, 0, 0)]
+    front = pareto_front(rs, objectives=("seconds",))
+    assert front == [rs[1]]
+
+
+# ---------------------------------------------------------------------- #
+# the engine
+# ---------------------------------------------------------------------- #
+def test_engine_analytic_sweep_and_caches(rng):
+    inputs, shapes = _workload(rng)
+    eng = SweepEngine(inputs, shapes, backend="analytic")
+    space = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.002, 0.02, 3.0]})
+    results = eng.sweep(space.grid())
+    assert all(r.ok for r in results), [r.error for r in results]
+    assert all(r.fallback_reasons == {} for r in results)
+    # arch-only sweep: plans lowered once, reused for the rest
+    assert eng.plan_cache_hits == len(results) - 1
+    # objectives populated and capacity trend preserved
+    assert results[0].dram_bytes >= results[-1].dram_bytes
+    assert all(r.seconds > 0 and r.energy_pj > 0 for r in results)
+
+
+def test_engine_calibration_cache_speeds_up_later_points(rng):
+    inputs, shapes = _workload(rng)
+    eng = SweepEngine(inputs, shapes, backend="analytic")
+    pts = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.01 * i for i in range(1, 9)]}).grid()
+    results = eng.sweep(pts)
+    assert all(r.ok for r in results)
+    # the first point pays transform + calibration; the tail must be
+    # clearly cheaper (closed-form only)
+    tail = [r.wall_seconds for r in results[2:]]
+    assert min(tail) < results[0].wall_seconds
+
+
+def test_engine_parallel_matches_serial(rng):
+    inputs, shapes = _workload(rng)
+    pts = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.002, 0.02, 0.2, 3.0]}).grid()
+    serial = SweepEngine(inputs, shapes).sweep(pts)
+    threaded = SweepEngine(inputs, shapes, max_workers=4).sweep(pts)
+    for s, t in zip(serial, threaded):
+        assert s.point == t.point
+        assert s.seconds == pytest.approx(t.seconds)
+        assert s.dram_bytes == pytest.approx(t.dram_bytes)
+
+
+def test_engine_drives_execution_backends(rng):
+    inputs, shapes = _workload(rng, n=24)
+    pts = [DesignPoint.make("gamma")]
+    for backend in ("python", "vector"):
+        res = SweepEngine(inputs, shapes, backend=backend).sweep(pts)
+        assert res[0].ok, res[0].error
+        assert res[0].seconds > 0
+
+
+def test_engine_vector_vs_analytic_trend_agreement(rng):
+    """Analytic and execution-based evaluation must agree on the
+    cross-capacity ordering of DRAM traffic (what a DSE ranks on)."""
+    inputs, shapes = _workload(rng, n=32)
+    pts = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.001, 3.0]}).grid()
+    ana = SweepEngine(inputs, shapes, backend="analytic").sweep(pts)
+    exe = SweepEngine(inputs, shapes, backend="python").sweep(pts)
+    assert all(r.ok for r in ana + exe)
+    assert (ana[0].dram_bytes > ana[1].dram_bytes) == \
+        (exe[0].dram_bytes > exe[1].dram_bytes)
+
+
+def test_engine_records_errors_instead_of_raising(rng):
+    inputs, shapes = _workload(rng, n=16)
+    eng = SweepEngine(inputs, shapes)
+    res = eng.evaluate(DesignPoint.make("no-such-design"))
+    assert not res.ok and "no-such-design" in res.error
+
+
+def test_engine_failed_points_excluded_from_pareto(rng):
+    inputs, shapes = _workload(rng, n=16)
+    eng = SweepEngine(inputs, shapes)
+    results = [eng.evaluate(DesignPoint.make("gamma")),
+               eng.evaluate(DesignPoint.make("no-such-design"))]
+    front = pareto_front([r for r in results if r.ok])
+    assert len(front) == 1 and front[0].ok

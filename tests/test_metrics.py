@@ -1,0 +1,151 @@
+"""Direct unit tests for core/metrics.py: evaluate()'s bottleneck and
+energy accounting, and the RooflineTerms three-term model -- previously
+only exercised indirectly through full accelerator runs."""
+import pytest
+
+from repro.core.components import PerformanceModel
+from repro.core.mapping import MappingResolver
+from repro.core.metrics import (ENERGY_TABLE_PJ, Report, RooflineTerms,
+                                evaluate, roofline)
+from repro.core.spec import load_spec
+
+
+def _spec(clock_ghz=1.0, dram_gbs=10.0):
+    return load_spec({
+        "name": "Unit",
+        "einsum": {
+            "declaration": {"A": ["M", "K"], "B": ["K", "N"],
+                            "Z": ["M", "N"]},
+            "expressions": ["Z[m, n] = A[m, k] * B[k, n]"],
+        },
+        "mapping": {"loop-order": {"Z": ["M", "K", "N"]}},
+        "format": {
+            "A": {"CSR": {"M": {"format": "C", "cbits": 32, "pbits": 32},
+                          "K": {"format": "C", "cbits": 32, "pbits": 64}}},
+        },
+        "architecture": {
+            "clock_ghz": clock_ghz,
+            "topologies": {"main": {
+                "name": "chip", "num": 1,
+                "local": [
+                    {"name": "Mem", "class": "DRAM",
+                     "bandwidth": dram_gbs},
+                    {"name": "ALU", "class": "Compute", "type": "mul"},
+                    {"name": "Acc", "class": "Compute", "type": "add"},
+                    {"name": "Xint", "class": "Intersection",
+                     "type": "two_finger"},
+                ],
+            }},
+        },
+        "binding": {"Z": {
+            "topology": "main",
+            "storage": [],
+            "compute": [{"component": "ALU", "op": "mul"},
+                        {"component": "Acc", "op": "add"}],
+        }},
+    })
+
+
+def _model(spec):
+    plans = {"Z": MappingResolver(spec).plan("Z")}
+    return PerformanceModel(spec, plans), plans
+
+
+def test_evaluate_energy_accounting_exact():
+    spec = _spec()
+    model, plans = _model(spec)
+    model.begin_einsum("Z")
+    model.compute("Z", "mul", n=100)
+    model.compute("Z", "add", n=40)
+    model.isect_step("Z", "K", "A", n=30)
+    # A payload read at K: 64-bit payloads -> 8 bytes each, unbound ->
+    # straight to DRAM
+    model.touch("Z", "A", "K", (), "payload", "r", n=10)
+    model.end_einsum("Z")
+    rep = evaluate(spec, plans, model)
+
+    assert rep.action_counts["mul"] == 100
+    assert rep.action_counts["add"] == 40
+    assert rep.action_counts["isect_step"] == 30
+    assert rep.dram_bytes == pytest.approx(80.0)
+    assert rep.energy_breakdown_pj["mul"] == \
+        pytest.approx(100 * ENERGY_TABLE_PJ["mul"])
+    assert rep.energy_breakdown_pj["add"] == \
+        pytest.approx(40 * ENERGY_TABLE_PJ["add"])
+    assert rep.energy_breakdown_pj["isect"] == \
+        pytest.approx(30 * ENERGY_TABLE_PJ["isect_step"])
+    assert rep.energy_breakdown_pj["dram"] == \
+        pytest.approx(80.0 * ENERGY_TABLE_PJ["dram_per_byte"])
+    assert rep.energy_pj == pytest.approx(sum(
+        rep.energy_breakdown_pj.values()))
+
+
+def test_evaluate_bottleneck_is_max_component():
+    spec = _spec(clock_ghz=1.0, dram_gbs=10.0)
+    model, plans = _model(spec)
+    model.begin_einsum("Z")
+    model.compute("Z", "mul", n=1000)      # ALU: 1000 cycles @ 1GHz = 1us
+    # DRAM: 100 bytes / 10 GB/s = 10 ns << ALU
+    model.touch("Z", "A", "K", (), "payload", "r", n=12)
+    model.end_einsum("Z")
+    rep = evaluate(spec, plans, model)
+    assert len(rep.blocks) == 1
+    blk = rep.blocks[0]
+    assert blk.bottleneck == "ALU"
+    assert blk.seconds == pytest.approx(1000 / 1e9)
+    assert rep.seconds == pytest.approx(sum(b.seconds for b in rep.blocks))
+    assert blk.component_seconds["Mem"] == \
+        pytest.approx(96 / 10e9)
+
+
+def test_evaluate_dram_bottleneck_when_bandwidth_starved():
+    spec = _spec(clock_ghz=1.0, dram_gbs=0.000001)   # 1 KB/s
+    model, plans = _model(spec)
+    model.begin_einsum("Z")
+    model.compute("Z", "mul", n=10)
+    model.touch("Z", "A", "K", (), "payload", "r", n=100)
+    model.end_einsum("Z")
+    rep = evaluate(spec, plans, model)
+    assert rep.blocks[0].bottleneck == "Mem"
+    assert rep.seconds == pytest.approx(800 / 1e3)
+
+
+def test_report_fields_and_summary():
+    spec = _spec()
+    model, plans = _model(spec)
+    model.begin_einsum("Z")
+    model.compute("Z", "mul", n=5)
+    model.end_einsum("Z")
+    rep = evaluate(spec, plans, model)
+    assert isinstance(rep, Report)
+    assert rep.design == "Unit"
+    assert rep.fallback_reasons == {}
+    assert "design=Unit" in rep.summary()
+    assert rep.dram_bytes == rep.dram_read_bytes + rep.dram_write_bytes
+
+
+# ---------------------------------------------------------------------- #
+# RooflineTerms / roofline()
+# ---------------------------------------------------------------------- #
+def test_roofline_terms_dominant_and_seconds():
+    t = RooflineTerms(compute_s=3.0, memory_s=1.0, collective_s=2.0)
+    assert t.dominant == "compute"
+    assert t.seconds == 3.0
+    t = RooflineTerms(compute_s=0.1, memory_s=5.0, collective_s=2.0)
+    assert t.dominant == "memory"
+    assert t.seconds == 5.0
+
+
+def test_roofline_math():
+    t = roofline(flops=197e12, bytes_hbm=819e9, bytes_collective=0.0,
+                 chips=1)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == 0.0
+    # scaling out divides every term
+    t2 = roofline(flops=197e12, bytes_hbm=819e9, bytes_collective=50e9,
+                  chips=2)
+    assert t2.compute_s == pytest.approx(0.5)
+    assert t2.memory_s == pytest.approx(0.5)
+    assert t2.collective_s == pytest.approx(0.5)
+    assert t2.seconds == pytest.approx(0.5)
