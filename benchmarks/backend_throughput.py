@@ -1,10 +1,19 @@
 """Simulator-throughput benchmark: elements/sec per execution backend.
 
-Runs the Rowwise-SpMSpM cascade (zoo) on synthetic uniform sparse
-matrices (up to 10k x 10k at 1% density) through both execution
-backends and reports throughput as *leaf multiply operations per
-second* -- the loop-nest work unit both backends count identically
-(``compute mul`` actions, verified equal by tests/test_backends.py).
+Runs three SpMSpM mappings on synthetic uniform sparse matrices
+through the execution backends and reports throughput as *leaf
+multiply operations per second* -- the loop-nest work unit both
+backends count identically (``compute mul`` actions, verified equal by
+tests/test_backends.py):
+
+  * ``rowwise``      unpartitioned Gustavson (zoo), up to 10k x 10k at
+                     1% -- the legacy baseline series;
+  * ``flattened``    SIGMA-style mapping: K shape-split, (M, K0)
+                     flattened, MK0 occupancy-split, output ranks bound
+                     at the leaf -- runs through the vector path's CSF
+                     transform pre-pass;
+  * ``partitioned``  OuterSPACE/Gamma-style double occupancy split of
+                     M and K.
 
 The Python interpreter is capped at ``PY_MAX_SIZE`` (its rate is flat
 in problem size, so the cap does not flatter it); the vector backend
@@ -12,7 +21,9 @@ runs every size through ``VectorBackend.execute_csf`` -- columnar in,
 columnar out, no per-element Python objects on the hot path.
 
 ``python -m benchmarks.backend_throughput --record`` rewrites
-BENCH_backend.json, the perf-trajectory baseline later PRs must beat.
+BENCH_backend.json, the perf-trajectory baseline later PRs must beat
+(``vector_rate`` is the legacy rowwise key; the mapped workloads add
+``vector_rate_flattened`` / ``vector_rate_partitioned``).
 """
 from __future__ import annotations
 
@@ -28,14 +39,81 @@ from repro.accelerators.zoo import rowwise_spmspm
 from repro.core.csf import CSF
 from repro.core.iteration import PythonBackend
 from repro.core.mapping import MappingResolver
+from repro.core.spec import AcceleratorSpec, load_spec
 from repro.core.trace import CollectingInstr
 from repro.core.vectorized import VectorBackend
 
 SIZES = [1024, 4096, 10000]
+MAPPED_SIZES = [1024, 4096]          # flattened/partitioned series
 SMOKE_SIZES = [256]
 DENSITY = 0.01
 PY_MAX_SIZE = 1024
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_backend.json"
+
+
+def flattened_spmspm(k_tile: int = 128,
+                     stationary: int = 4096) -> AcceleratorSpec:
+    """SIGMA-style flattened mapping of plain SpMSpM: K shape-split at
+    the FlexDPE granularity, (M, K0) flattened, the flattened nonzeros
+    occupancy-distributed; Z's coordinates are recovered from index-var
+    bindings at the leaf (no loop rank matches an output rank)."""
+    return load_spec({
+        "name": "Flattened-SpMSpM",
+        "einsum": {
+            "declaration": {
+                "A": ["K", "M"],
+                "B": ["K", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[k, m] * B[k, n]"],
+        },
+        "mapping": {
+            "rank-order": {"A": ["K", "M"], "B": ["K", "N"],
+                           "Z": ["M", "N"]},
+            "partitioning": {
+                "Z": {
+                    "K": [f"uniform_shape({k_tile})"],
+                    "(M, K0)": ["flatten()"],
+                    "MK0": [f"uniform_occupancy(A.{stationary})"],
+                },
+            },
+            "loop-order": {"Z": ["K1", "MK01", "MK00", "N"]},
+        },
+    })
+
+
+def partitioned_spmspm(rows: int = 128,
+                       k_tile: int = 256) -> AcceleratorSpec:
+    """OuterSPACE/Gamma-style partitioned mapping of plain SpMSpM:
+    rows of A occupancy-cycled, K occupancy-split per row batch; B is
+    fetched by coordinate (leader-follower boundaries are per-fiber, so
+    B stays unpartitioned and co-iterates at K0)."""
+    return load_spec({
+        "name": "Partitioned-SpMSpM",
+        "einsum": {
+            "declaration": {
+                "A": ["M", "K"],
+                "B": ["K", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m, k] * B[k, n]"],
+        },
+        "mapping": {
+            "partitioning": {
+                "Z": {
+                    "M": [f"uniform_occupancy(A.{rows})"],
+                    "K": [f"uniform_occupancy(A.{k_tile})"],
+                },
+            },
+            "loop-order": {"Z": ["M1", "M0", "K1", "K0", "N"]},
+        },
+    })
+
+
+MAPPED_WORKLOADS = {
+    "flattened": (flattened_spmspm, ["K", "M"]),
+    "partitioned": (partitioned_spmspm, ["M", "K"]),
+}
 
 
 def synth_csf(n: int, density: float, seed: int, name: str,
@@ -85,8 +163,8 @@ def _measure_analytic(plan, a: CSF, b: CSF, n: int
 
 
 def bench(sizes: Optional[List[int]] = None, backend: str = "both",
-          py_max_size: int = PY_MAX_SIZE, density: float = DENSITY
-          ) -> List[Dict]:
+          py_max_size: int = PY_MAX_SIZE, density: float = DENSITY,
+          mapped_sizes: Optional[List[int]] = None) -> List[Dict]:
     spec = rowwise_spmspm()
     plan = MappingResolver(spec).plan("Z")
     # warm lazy imports (jax) outside the timed region
@@ -107,21 +185,50 @@ def bench(sizes: Optional[List[int]] = None, backend: str = "both",
             runs.append(("analytic", _measure_analytic(plan, a, b, n)))
         for bname, (dt, muls, out_nnz) in runs:
             records.append({
-                "backend": bname, "size": n, "density": density,
+                "workload": "rowwise", "backend": bname, "size": n,
+                "density": density,
                 "nnz_a": a.nnz, "nnz_b": b.nnz, "out_nnz": out_nnz,
                 "elements": muls, "seconds": round(dt, 4),
                 "elements_per_sec": round(muls / dt, 1) if dt else 0.0,
             })
+
+    # flattened / partitioned mappings: vector path only (raw CSFs in,
+    # the Section-3.2 transform pre-pass runs inside execute_csf)
+    if backend in ("vector", "both"):
+        for wname, (factory, a_ranks) in MAPPED_WORKLOADS.items():
+            mplan = MappingResolver(factory()).plan("Z")
+            for n in (mapped_sizes if mapped_sizes is not None
+                      else MAPPED_SIZES):
+                a = synth_csf(n, density, 1, "A", a_ranks)
+                b = synth_csf(n, density, 2, "B", ["K", "N"])
+                dt, muls, out_nnz = _measure_vector(mplan, a, b)
+                records.append({
+                    "workload": wname, "backend": "vector", "size": n,
+                    "density": density,
+                    "nnz_a": a.nnz, "nnz_b": b.nnz, "out_nnz": out_nnz,
+                    "elements": muls, "seconds": round(dt, 4),
+                    "elements_per_sec": round(muls / dt, 1) if dt else 0.0,
+                })
     return records
 
 
 def summarize(records: List[Dict]) -> Dict:
     by = {}
     for r in records:
-        by.setdefault(r["backend"], []).append(r)
-    out: Dict = {"workload": "rowwise-spmspm",
+        if r.get("workload", "rowwise") == "rowwise":
+            by.setdefault(r["backend"], []).append(r)
+    workloads = sorted({r.get("workload", "rowwise") for r in records})
+    out: Dict = {"workload": "spmspm",
+                 "mappings": workloads,
                  "metric": "leaf multiplies per second",
                  "records": records}
+    for wname in MAPPED_WORKLOADS:
+        ws = [r for r in records
+              if r.get("workload") == wname and r["backend"] == "vector"]
+        if ws:
+            best = max(ws, key=lambda r: r["size"])
+            out[f"vector_rate_{wname}"] = best["elements_per_sec"]
+            out[f"vector_rate_{wname}_measured_at"] = best["size"]
     if "python" in by and "vector" in by:
         py_best = max(by["python"], key=lambda r: r["size"])
         vec_best = max(by["vector"], key=lambda r: r["size"])
@@ -152,10 +259,11 @@ def run(backend: str = "both", smoke: bool = False
     """benchmarks.run entry point: CSV rows (name, us, derived)."""
     sizes = SMOKE_SIZES if smoke else SIZES
     py_max = max(sizes) if smoke else PY_MAX_SIZE
-    records = bench(sizes=sizes, backend=backend, py_max_size=py_max)
+    records = bench(sizes=sizes, backend=backend, py_max_size=py_max,
+                    mapped_sizes=SMOKE_SIZES if smoke else None)
     rows = []
     for r in records:
-        rows.append((f"backend/{r['backend']}/n{r['size']}",
+        rows.append((f"backend/{r['workload']}/{r['backend']}/n{r['size']}",
                      r["seconds"] * 1e6, r["elements_per_sec"]))
     summary = summarize(records)
     if "speedup" in summary:
@@ -177,7 +285,8 @@ def main() -> None:
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes
              else (SMOKE_SIZES if args.smoke else SIZES))
     records = bench(sizes=sizes, backend=args.backend,
-                    py_max_size=max(sizes) if args.smoke else PY_MAX_SIZE)
+                    py_max_size=max(sizes) if args.smoke else PY_MAX_SIZE,
+                    mapped_sizes=SMOKE_SIZES if args.smoke else None)
     summary = summarize(records)
     print(json.dumps(summary, indent=2))
     if args.record:

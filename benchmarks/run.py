@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13]
                                            [--backend python|vector|analytic]
-                                           [--smoke]
+                                           [--smoke] [--explain-fallbacks]
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the host
 wall time of the modeled run where meaningful; ``derived`` is the
@@ -11,7 +11,11 @@ or a 1.0/0.0 claim check).
 
 ``--backend`` selects the execution engine for benchmarks that thread
 it through (backend, kernels, table2); ``--smoke`` runs the fast
-functional subset used by CI.
+functional subset used by CI; ``--explain-fallbacks`` runs every
+accelerator spec and zoo cascade through the selected backend (default
+vector) on small inputs and prints the per-Einsum ``fallback_reasons``
+-- the CLI view of vector-path coverage gaps that is otherwise only
+visible on ``SimResult``.
 """
 from __future__ import annotations
 
@@ -20,6 +24,56 @@ import inspect
 import sys
 import time
 import traceback
+
+
+def explain_fallbacks(backend: str) -> int:
+    """Print ``cascade,einsum,reason`` for every Einsum the selected
+    backend routed through the Python oracle; returns the number of
+    *accelerator-spec* fallbacks (0 = every validated design runs
+    native -- the CI gate).  Zoo cascades with known-uncovered plan
+    shapes (affine conv / FFT) print but do not count."""
+    import numpy as np
+
+    from repro.accelerators import DEFAULT_PARAMS, REGISTRY, simulate
+    from repro.accelerators.zoo import ZOO
+    from repro.core.generator import CascadeSimulator
+    from benchmarks.table2_zoo import _inputs
+
+    rng = np.random.default_rng(0)
+    a = rng.random((24, 24)) * (rng.random((24, 24)) < 0.2)
+    b = rng.random((24, 24)) * (rng.random((24, 24)) < 0.2)
+    shapes = {"m": 24, "k": 24, "n": 24}
+    print("cascade,einsum,reason")
+    n_fallbacks = 0
+
+    def report(name, reasons, count=True):
+        nonlocal n_fallbacks
+        if not reasons:
+            print(f"{name},-,native")
+            return
+        for einsum, reason in sorted(reasons.items()):
+            if count:
+                n_fallbacks += 1
+            print(f"{name},{einsum},{reason}")
+
+    for name in sorted(REGISTRY):
+        if name.startswith("graph") or name == "ours-vcp":
+            continue                 # graph designs need graph inputs
+        try:
+            res = simulate(name, {"A": a, "B": b}, shapes,
+                           params=DEFAULT_PARAMS.get(name),
+                           backend=backend, model=False)
+        except Exception as e:       # pragma: no cover - diagnostic path
+            print(f"{name},-,ERROR: {e}")
+            n_fallbacks += 1
+            continue
+        report(name, res.fallback_reasons)
+    for name in sorted(ZOO):
+        inputs, shp = _inputs(name, np.random.default_rng(0))
+        sim = CascadeSimulator(ZOO[name](), model=False, backend=backend)
+        res = sim.run(dict(inputs), shp)
+        report(name, res.fallback_reasons, count=False)
+    return n_fallbacks
 
 BENCHES = {
     "table1": "benchmarks.table1_designs",
@@ -48,7 +102,17 @@ def main() -> None:
                     "support selection")
     ap.add_argument("--smoke", action="store_true",
                     help="fast functional subset (CI)")
+    ap.add_argument("--explain-fallbacks", action="store_true",
+                    help="print per-Einsum fallback_reasons for every "
+                    "accelerator and zoo cascade, then exit")
     args = ap.parse_args()
+    if args.explain_fallbacks:
+        n = explain_fallbacks(args.backend or "vector")
+        if n and (args.backend or "vector") == "vector":
+            # every validated accelerator design must run native on
+            # the vector path (the CI coverage gate)
+            raise SystemExit(1)
+        return
     if args.only:
         names = args.only.split(",")
     elif args.smoke:

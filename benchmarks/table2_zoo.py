@@ -34,6 +34,16 @@ def _inputs(name, rng):
         return {"A": rng.random((24, 24)) * (rng.random((24, 24)) < 0.2),
                 "B": rng.random((24, 24)) *
                 (rng.random((24, 24)) < 0.2)}, shapes
+    if name in ("elementwise-3way", "sparse-add-3way"):
+        shapes = {"m": 24, "n": 24}
+
+        def sp():
+            return rng.random((24, 24)) * (rng.random((24, 24)) < 0.3)
+        return {"A": sp(), "B": sp(), "C": sp()}, shapes
+    if name == "broadcast-outer":
+        shapes = {"m": 24, "n": 8}
+        return {"A": rng.random(24) * (rng.random(24) < 0.5),
+                "B": rng.random(24) * (rng.random(24) < 0.5)}, shapes
     raise KeyError(name)
 
 

@@ -176,7 +176,12 @@ def simulate(inputs, var_shapes, params=None, backend=None,
     """Run this design on real tensors; delegates to
     repro.accelerators.simulate (``backend`` selects the execution
     engine: 'python' oracle | 'vector' columnar CSF | 'analytic'
-    closed-form density model)."""
+    closed-form density model).
+
+    Both phases -- the (K, M)-flattened, occupancy-distributed multiply
+    and the M-partitioned merge -- lower to the VectorPlan IR, so
+    ``backend='vector'`` executes natively (``SimResult.fallback_reasons
+    == {}``) instead of silently routing through the interpreter."""
     from repro.accelerators import simulate as _simulate
 
     return _simulate("outerspace", inputs, var_shapes, params=params,

@@ -166,7 +166,13 @@ def simulate(inputs, var_shapes, params=None, backend=None,
     """Run this design on real tensors; delegates to
     repro.accelerators.simulate (``backend`` selects the execution
     engine: 'python' oracle | 'vector' columnar CSF | 'analytic'
-    closed-form density model)."""
+    closed-form density model).
+
+    The full cascade -- the take() filter pipeline, the K-tiled /
+    (M, K0)-flattened / occupancy-distributed stationary matrix, and
+    the leaf-bound output ranks -- lowers to the VectorPlan IR, so
+    ``backend='vector'`` executes natively (``SimResult.fallback_reasons
+    == {}``) instead of silently routing through the interpreter."""
     from repro.accelerators import simulate as _simulate
 
     return _simulate("sigma", inputs, var_shapes, params=params,

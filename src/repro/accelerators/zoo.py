@@ -159,6 +159,62 @@ def sparse_add() -> AcceleratorSpec:
     })
 
 
+def elementwise_3way() -> AcceleratorSpec:
+    """Three-factor elementwise product: every rank co-iterates three
+    drivers, exercising the nested (left-leaning) two-finger
+    intersection chain and its lazy-pull instrumentation accounting on
+    the vector path."""
+    return load_spec({
+        "name": "Elementwise-3way",
+        "einsum": {
+            "declaration": {
+                "A": ["M", "N"],
+                "B": ["M", "N"],
+                "C": ["M", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m, n] * B[m, n] * C[m, n]"],
+        },
+        "mapping": {},
+    })
+
+
+def sparse_add_3way() -> AcceleratorSpec:
+    """Three-term elementwise sum: the k-ary sorted multi-way merge
+    (``kernels.ops.union_k_keys``) on the vector path."""
+    return load_spec({
+        "name": "Sparse-Add-3way",
+        "einsum": {
+            "declaration": {
+                "A": ["M", "N"],
+                "B": ["M", "N"],
+                "C": ["M", "N"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m, n] + B[m, n] + C[m, n]"],
+        },
+        "mapping": {},
+    })
+
+
+def broadcast_outer() -> AcceleratorSpec:
+    """Broadcast along a driverless (dense) output rank: no input has
+    an N rank, so the N loop enumerates the full coordinate range
+    (``DenseEnumerate`` on the vector path)."""
+    return load_spec({
+        "name": "Broadcast-Outer",
+        "einsum": {
+            "declaration": {
+                "A": ["M"],
+                "B": ["M"],
+                "Z": ["M", "N"],
+            },
+            "expressions": ["Z[m, n] = A[m] * B[m]"],
+        },
+        "mapping": {},
+    })
+
+
 ZOO: Dict[str, Any] = {
     "eyeriss-conv": eyeriss_conv,
     "toeplitz-conv": toeplitz_conv,
@@ -167,4 +223,7 @@ ZOO: Dict[str, Any] = {
     "fft-step": cooley_tukey_step,
     "rowwise-spmspm": rowwise_spmspm,
     "sparse-add": sparse_add,
+    "elementwise-3way": elementwise_3way,
+    "sparse-add-3way": sparse_add_3way,
+    "broadcast-outer": broadcast_outer,
 }

@@ -21,6 +21,7 @@ from .mapping import MappingResolver
 from .metrics import ENERGY_TABLE_PJ, Report, RooflineTerms, roofline
 from .spec import AcceleratorSpec, load_spec
 from .vectorized import VectorBackend
+from .vplan import VectorPlan, lower as lower_vector_plan
 
 __all__ = [
     "Einsum", "Semiring", "dense_reference", "parse_einsum",
@@ -29,4 +30,5 @@ __all__ = [
     "Report", "RooflineTerms", "roofline", "AcceleratorSpec", "load_spec",
     "ExecutorBackend", "PythonBackend", "VectorBackend",
     "AnalyticBackend", "TensorDensity", "get_backend",
+    "VectorPlan", "lower_vector_plan",
 ]

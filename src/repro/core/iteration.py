@@ -286,7 +286,7 @@ class EinsumExecutor:
                     return
                 vals = tuple(bindings[v] for v in vars_)
                 coord = vals if len(vals) > 1 else vals[0]
-                if rank[-1].isdigit() and not rank.endswith("0"):
+                if self.plan.created_ranks.get(rank) == "upper":
                     # upper partition level: position by range (bisect)
                     coord = self._partition_start(cur, coord)
                     if coord is None:

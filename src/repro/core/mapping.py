@@ -59,6 +59,13 @@ class EinsumPlan:
     var_map: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
     # tensor -> partitioning keys that apply to it (leader-follower aware)
     applied: Dict[str, List] = field(default_factory=dict)
+    # tensor -> ordered transform steps with sizes resolved, so backends
+    # that hold tensors in columnar (CSF) form can run the Sec. 3.2
+    # pre-pass themselves without the spec/resolver in hand.  Steps:
+    #   ("flatten", (rank, ...))                 flatten a rank group
+    #   ("split", rank, ((kind, size, leader), ...))  top-down splits,
+    #        kind in {"shape", "occupancy"}; leader None for shape
+    transform_recipe: Dict[str, List[Tuple]] = field(default_factory=dict)
 
     @property
     def spatial_fanout_ranks(self) -> List[str]:
@@ -105,6 +112,7 @@ class MappingResolver:
         partitioned_tensors: Dict[str, bool] = {t: False for t in cur}
         created: Dict[str, str] = {}
         applied: Dict[str, List] = {t: [] for t in cur}
+        recipe: Dict[str, List[Tuple]] = {t: [] for t in cur}
         for key, directives in em.partitioning.items():
             if isinstance(key, tuple):
                 # flatten group
@@ -123,6 +131,7 @@ class MappingResolver:
                         ranks[i:i] = [new_name]
                         partitioned_tensors[t] = True
                         applied[t].append(key)
+                        recipe[t].append(("flatten", tuple(key)))
             else:
                 n = len([dv for dv in directives
                          if not isinstance(dv, Flatten)])
@@ -137,6 +146,11 @@ class MappingResolver:
                 # before *any* tensor is split at this key (the leader may
                 # come first in dict order and be renamed mid-pass)
                 pre = {t: list(r) for t, r in cur.items()}
+                split_steps = tuple(
+                    ("shape", self._resolve_size(d.size), None)
+                    if isinstance(d, UniformShape)
+                    else ("occupancy", d.size, d.leader)
+                    for d in directives if not isinstance(d, Flatten))
                 for t, ranks in cur.items():
                     if key in ranks and self._partition_applies(
                             t, key, directives, pre):
@@ -144,6 +158,7 @@ class MappingResolver:
                         ranks[i:i + 1] = new_names
                         partitioned_tensors[t] = True
                         applied[t].append(key)
+                        recipe[t].append(("split", key, split_steps))
 
         # ---- loop order
         if em.loop_order:
@@ -222,7 +237,8 @@ class MappingResolver:
         return EinsumPlan(einsum=einsum, loop_order=loop, tensors=tensors,
                           space_ranks=space, time_ranks=time,
                           output=out_name, created_ranks=created,
-                          var_map=dict(self.var_map), applied=applied)
+                          var_map=dict(self.var_map), applied=applied,
+                          transform_recipe=recipe)
 
     def _partition_applies(self, t: str, key: str, directives,
                            cur: Dict[str, List[str]]) -> bool:

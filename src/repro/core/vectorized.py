@@ -1,76 +1,55 @@
 """VectorBackend: columnar per-rank co-iteration over CSF arrays.
 
-Executes the same mapped loop nests as the Python interpreter
-(``EinsumExecutor``) but one *rank* at a time instead of one *element*
-at a time: the set of live iteration points at each loop level (the
-frontier) is a struct-of-arrays, and advancing one loop level is a
-handful of batched array ops -- segment expansion, offset-keyed sorted
-intersection / union (``repro.kernels.ops``: the Pallas skip-ahead
-intersection kernel on TPU, its ``searchsorted`` lowering on CPU), and
-segmented reduction into the output.
+Execution is a three-stage pipeline (DESIGN.md):
+
+  1. ``core/vplan.py`` lowers the ``EinsumPlan`` into the **VectorPlan
+     IR** -- a per-loop-rank list of typed ops (``Drive`` /
+     ``Intersect`` / ``UnionK`` / ``DenseEnumerate`` / ``Lookup``) plus
+     a ``Reduce``; every unsupported-plan decision happens there, so
+     once lowering succeeds execution cannot bail mid-flight (the one
+     data-dependent exception, ``_CapacityExceeded`` on int64 key
+     overflow, also routes to the interpreter fallback).
+  2. For the columnar entry point (``execute_csf``) a **pre-pass**
+     applies the Einsum's Section-3.2 transform recipe (flatten /
+     uniform partitioning / swizzle) directly on the CSF arrays.
+  3. This module **executes** the IR one rank at a time: the set of
+     live iteration points at each loop level (the frontier) is a
+     struct-of-arrays, and each IR op maps onto a batched kernel
+     primitive via ``_DISPATCH`` -- segment expansion, offset-keyed
+     sorted intersection / k-ary union / probe gathers
+     (``repro.kernels.ops``: Pallas kernels on TPU, ``searchsorted``
+     lowerings on CPU), and a segmented in-order reduction.
 
 Instrumentation counts are emitted in aggregate (one ``n``-weighted
 call per action kind) and match the interpreter's per-element counts
-exactly; output fibertrees are bit-identical, including float
-accumulation order (contributions to one output coordinate are summed
-in loop-iteration order).  Plans outside the supported class -- affine
-or constant indices, take(), partitioned / flattened ranks, driverless
-(dense) loop ranks, >2 co-iterated tensors per rank, non-arithmetic
-semirings, leader-follower intersection -- transparently fall back to
-``PythonBackend``, so ``VectorBackend`` is safe as a drop-in default.
-See DESIGN.md for the architecture and the exact count semantics.
+exactly -- including the lazy-pull semantics of nested two-finger
+intersections, leader-follower probing, and catch-up lookups; output
+fibertrees are bit-identical, including float accumulation order.
+Plans outside the IR -- affine or constant indices, non-arithmetic
+semirings, sums of non-atomic or rank-unaligned terms, update-in-place
+outputs -- transparently fall back to ``PythonBackend``, so
+``VectorBackend`` is safe as a drop-in default.
 """
 from __future__ import annotations
 
 from collections import Counter
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .csf import CSF, _from_sorted_points
-from .einsum import BinOp, Semiring, TensorAccess
+from .einsum import BinOp, Semiring, Take, TensorAccess
 from .fibertree import FTensor
-from .iteration import EinsumExecutor, ExecutorBackend, PythonBackend
+from .iteration import ExecutorBackend, PythonBackend
 from .mapping import EinsumPlan
 from .trace import Instrumentation, NullInstr
+from .vplan import (DenseEnumerate, Drive, Intersect, LevelIR, Lookup,
+                    UnionK, VectorPlan, _Unsupported, lower,
+                    prepare_csf_inputs)
 
 #: level-0 frontier slice size used to bound peak expansion memory when
 #: the outermost loop rank is an output rank (slices are independent)
 DEFAULT_CHUNK_ITEMS = 1024
-
-
-class _Unsupported(Exception):
-    """Plan shape the vector path does not cover (-> fallback)."""
-
-
-# ---------------------------------------------------------------------- #
-# expression analysis
-# ---------------------------------------------------------------------- #
-def _product_accesses(expr) -> Optional[List[TensorAccess]]:
-    """Accesses of a pure multiplicative chain, in evaluation order."""
-    out: List[TensorAccess] = []
-
-    def rec(e) -> bool:
-        if isinstance(e, TensorAccess):
-            out.append(e)
-            return True
-        if isinstance(e, BinOp) and e.op == "*":
-            return rec(e.lhs) and rec(e.rhs)
-        return False
-
-    return out if rec(expr) else None
-
-
-def _classify_expr(expr) -> Tuple[str, List[TensorAccess]]:
-    """('product', accesses) or ('sum', [lhs, rhs]); raises otherwise."""
-    accs = _product_accesses(expr)
-    if accs is not None:
-        return "product", accs
-    if (isinstance(expr, BinOp) and expr.op in "+-"
-            and isinstance(expr.lhs, TensorAccess)
-            and isinstance(expr.rhs, TensorAccess)):
-        return "sum", [expr.lhs, expr.rhs]
-    raise _Unsupported(f"expression shape {expr}")
 
 
 # ---------------------------------------------------------------------- #
@@ -84,35 +63,74 @@ def _expand(lo: np.ndarray, hi: np.ndarray
     item_of = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
     offs = np.zeros(len(counts) + 1, dtype=np.int64)
     np.cumsum(counts, out=offs[1:])
-    within = np.arange(total, dtype=np.int64) - offs[item_of]
-    elem = lo[item_of] + within
+    elem = np.repeat(lo - offs[:-1], counts)
+    elem += np.arange(total, dtype=np.int64)
     return item_of, elem, counts, offs
 
 
-def _seg_last(coords: np.ndarray, offs: np.ndarray, counts: np.ndarray
-              ) -> np.ndarray:
-    """Last coordinate of each segment (0 for empty segments); safe
-    when the whole expanded array is empty."""
-    out = np.zeros(len(counts), dtype=np.int64)
-    if len(coords):
-        out = np.where(counts > 0,
-                       coords[np.maximum(offs[1:] - 1, 0)], 0)
+class _CapacityExceeded(Exception):
+    """Packed int64 sort keys would overflow for this data (frontier
+    size x coordinate domain beyond 2^62).  The one data-dependent
+    limit of the vector path: ``execute()`` falls back to the
+    interpreter, which has no such bound."""
+
+
+def _pack_factors(width: int, coord_arrays, n_groups: int
+                  ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Shared coordinate-key packing: per-column domain sizes over all
+    ``coord_arrays`` ([n, width] each), mixed-radix factors, and the
+    per-group multiplier.  Packed keys
+    (group * group_mult + coord . factors) must stay below 2^62."""
+    mults = np.ones(width, dtype=np.int64)
+    for c in coord_arrays:
+        if len(c):
+            mults = np.maximum(mults, c.max(axis=0).astype(np.int64) + 1)
+    factors = np.ones(width, dtype=np.int64)
+    for j in range(width - 2, -1, -1):
+        factors[j] = factors[j + 1] * mults[j + 1]
+    group_mult = int(factors[0] * mults[0])
+    if max(n_groups, 1) * max(group_mult, 1) >= (1 << 62):
+        raise _CapacityExceeded("coordinate key overflow")
+    return mults, factors, group_mult
+
+
+def _prefix_present(present: np.ndarray, offs: np.ndarray,
+                    k: np.ndarray) -> np.ndarray:
+    """Per item: how many of its first ``k`` stream elements satisfy
+    ``present`` (consumption happens in stream order)."""
+    cp = np.zeros(len(present) + 1, dtype=np.int64)
+    np.cumsum(present, out=cp[1:])
+    idx = np.minimum(offs[:-1] + k, offs[1:])
+    return cp[idx] - cp[offs[:-1]]
+
+
+def _gather_at(arr: np.ndarray, offs: np.ndarray, k: np.ndarray,
+               mask: np.ndarray) -> np.ndarray:
+    """arr[offs[i] + k[i] - 1] per masked item (0 elsewhere)."""
+    out = np.zeros(len(k), dtype=np.int64)
+    if mask.any() and len(arr):
+        idx = np.minimum(offs[:-1] + np.maximum(k, 1) - 1, len(arr) - 1)
+        vals = arr[idx]
+        out[mask] = vals[mask]
     return out
 
 
 class _Frontier:
-    """Live iteration points: per-tensor element positions + captured
-    output coordinate columns.  ``pos`` semantics: >= 0 element index at
-    the tensor's current depth, -1 absent (union), -2 not yet descended
-    (root)."""
+    """Live iteration points: per-tensor element positions, captured
+    output coordinate columns, and captured index-var value columns.
+    ``pos`` semantics: >= 0 element index at the tensor's current
+    depth, -1 absent (union miss / failed lookup), -2 not yet
+    descended (root)."""
 
-    __slots__ = ("n", "pos", "out_cols")
+    __slots__ = ("n", "pos", "out_cols", "var_cols")
 
     def __init__(self, n: int, pos: Dict[str, np.ndarray],
-                 out_cols: List[np.ndarray]):
+                 out_cols: List[np.ndarray],
+                 var_cols: Dict[str, np.ndarray]):
         self.n = n
         self.pos = pos
         self.out_cols = out_cols
+        self.var_cols = var_cols
 
     def take(self, idx: np.ndarray, extra_col: Optional[np.ndarray] = None
              ) -> "_Frontier":
@@ -120,12 +138,187 @@ class _Frontier:
         if extra_col is not None:
             cols.append(extra_col)
         return _Frontier(len(idx), {t: p[idx] for t, p in self.pos.items()},
-                         cols)
+                         cols, {v: c[idx] for v, c in self.var_cols.items()})
 
     def slice(self, i0: int, i1: int) -> "_Frontier":
         return _Frontier(i1 - i0,
                          {t: p[i0:i1] for t, p in self.pos.items()},
-                         [c[i0:i1] for c in self.out_cols])
+                         [c[i0:i1] for c in self.out_cols],
+                         {v: c[i0:i1] for v, c in self.var_cols.items()})
+
+    def filter(self, keep: np.ndarray) -> "_Frontier":
+        idx = np.flatnonzero(keep)
+        return self.take(idx)
+
+
+class _Stream:
+    """Per-item sorted element stream of one co-iteration node: keys
+    embed the item index (``item * item_mult + packed coord``), so all
+    per-item merges collapse into single sorted-array kernel calls.
+    Keys are built lazily -- a level with a single driver never packs
+    them (the hot single-tensor expansion stays int32)."""
+
+    __slots__ = ("keys", "item_of", "counts", "offs", "coord", "pos")
+
+    def __init__(self, keys, item_of, counts, offs, coord, pos):
+        self.keys = keys                     # [n] int64 sorted (or None)
+        self.item_of = item_of
+        self.counts = counts
+        self.offs = offs
+        self.coord = coord                   # [n, width] int
+        self.pos = pos                       # tensor -> element index / -1
+
+    @property
+    def n(self) -> int:
+        return len(self.item_of)
+
+
+# ---------------------------------------------------------------------- #
+# runtime co-iteration nodes: materialized stream + exact lazy-pull
+# accounting.  account(y, d) receives, per frontier item, how many
+# elements the parent pulled from this node (y) and whether the parent
+# drained it to completion (d); it emits this node's instrumentation
+# counts and propagates consumption to its children.
+# ---------------------------------------------------------------------- #
+class _RtDrive:
+    all_present = True
+
+    def __init__(self, node: Drive, stream: _Stream):
+        self.node = node
+        self.stream = stream
+
+    def account(self, counts: Counter, rank: str, y: np.ndarray,
+                d: np.ndarray) -> None:
+        n = int(y.sum())
+        if n:
+            counts[("touch", self.node.tensor, rank, "coord", "r")] += n
+
+
+class _RtPair:
+    """Two-finger pairwise intersection (the interpreter's
+    ``_intersect2`` generator, vectorized with its exact pull
+    accounting)."""
+
+    all_present = True
+
+    def __init__(self, left, right, stream: _Stream,
+                 sel: np.ndarray, idx_sel: np.ndarray,
+                 std_adv_l: np.ndarray, std_adv_r: np.ndarray):
+        self.left = left
+        self.right = right
+        self.stream = stream
+        self.sel = sel                       # match positions in left
+        self.idx_sel = idx_sel               # match positions in right
+        self.std_adv_l = std_adv_l
+        self.std_adv_r = std_adv_r
+
+    def account(self, counts, rank, y, d):
+        counts[("isect_match", rank)] += int(y.sum())
+        st = self.stream
+        part = (~d) & (y > 0)
+        any_part = bool(part.any())
+        for side, within_src, std_adv in (
+                (self.left, self.sel, self.std_adv_l),
+                (self.right, self.idx_sel, self.std_adv_r)):
+            ns = side.stream.counts
+            if any_part:
+                # match position within the item's side stream: only
+                # needed when a parent paused mid-item (nested chains)
+                within = within_src - side.stream.offs[st.item_of]
+                w = _gather_at(within, st.offs, y, part)
+            else:
+                w = 0
+            steps = np.where(d, std_adv, np.where(part, w, 0))
+            ys = np.where(d, np.minimum(std_adv + 1, ns),
+                          np.where(part, w + 1, 0))
+            ds = d & (std_adv >= ns)
+            _attr_steps(side, steps, counts, rank)
+            side.account(counts, rank, ys, ds)
+
+
+class _RtLF:
+    """Leader-follower intersection of two Drive fibers: the leader
+    enumerates, the follower is probed by coordinate (its non-matching
+    elements are never touched)."""
+
+    all_present = True
+
+    def __init__(self, left, right, stream: _Stream,
+                 sel: np.ndarray, idx_sel: np.ndarray,
+                 lead_is_left: np.ndarray):
+        self.left = left
+        self.right = right
+        self.stream = stream
+        self.sel = sel
+        self.idx_sel = idx_sel
+        self.lead_is_left = lead_is_left         # per item
+
+    def account(self, counts, rank, y, d):
+        counts[("isect_match", rank)] += int(y.sum())
+        st = self.stream
+        part = (~d) & (y > 0)
+        n_lead = np.where(self.lead_is_left, self.left.stream.counts,
+                          self.right.stream.counts)
+        if part.any():
+            l_within = self.sel - self.left.stream.offs[st.item_of]
+            r_within = self.idx_sel - self.right.stream.offs[st.item_of]
+            lead_within = np.where(self.lead_is_left[st.item_of],
+                                   l_within, r_within)
+            w = _gather_at(lead_within, st.offs, y, part)
+        else:
+            w = 0
+        pulls = np.where(d, n_lead, np.where(part, w + 1, 0))
+        for is_left, lead, foll in ((True, self.left, self.right),
+                                    (False, self.right, self.left)):
+            m = self.lead_is_left == is_left
+            p = np.where(m, pulls, 0)
+            n = int(p.sum())
+            if n:
+                counts[("isect_step", rank, lead.node.tensor)] += n
+                counts[("touch", foll.node.tensor, rank, "coord", "r")] += n
+            lead.account(counts, rank, p, d & m)
+        # the follower's own enumeration never runs: no leaf() touches
+
+
+class _RtUnion:
+    all_present = False
+
+    def __init__(self, children, stream: _Stream, members):
+        self.children = children
+        self.stream = stream
+        self.members = members                   # per child: bool [n]
+
+    def account(self, counts, rank, y, d):
+        st = self.stream
+        some = y > 0
+        for child, member in zip(self.children, self.members):
+            nc = child.stream.counts
+            # a suspended union has re-pulled the sources of its first
+            # y-1 yields only (the y-th element's pull happens after
+            # resume), plus the initial pull of every member stream
+            c = _prefix_present(member, st.offs, np.maximum(y - 1, 0))
+            pulls = np.where(d, nc,
+                             np.where(some, np.minimum(c + 1, nc), 0))
+            dc = d | (some & (c >= nc))
+            child.account(counts, rank, pulls, dc)
+
+
+def _attr_steps(child, k: np.ndarray, counts: Counter, rank: str) -> None:
+    """Charge one ``isect_step`` per consumed child element to every
+    tensor present in that element's payload (the interpreter's
+    ``_isect_count``)."""
+    total = int(k.sum())
+    if total == 0:
+        return
+    st = child.stream
+    if child.all_present:
+        for t in st.pos:
+            counts[("isect_step", rank, t)] += total
+        return
+    for t, p in st.pos.items():
+        n = int(_prefix_present(p >= 0, st.offs, k).sum())
+        if n:
+            counts[("isect_step", rank, t)] += n
 
 
 class VectorBackend(ExecutorBackend):
@@ -148,12 +341,18 @@ class VectorBackend(ExecutorBackend):
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
         try:
-            csf_out, _ = self._run_vectorized(
-                plan, tensors, semiring, instr, out_initial, isect_strategy)
+            vp = lower(plan, var_shapes, semiring, out_initial,
+                       isect_strategy, isect_leader)
+            csf = {}
+            for a in vp.accs:
+                v = tensors[a.tensor]
+                csf[a.tensor] = v if isinstance(v, CSF) else \
+                    CSF.from_ftensor(v)
+            csf_out, _ = self._run(vp, plan, csf, instr)
             self.last_path = "vector"
             self.last_fallback_reason = None
             return csf_out.to_ftensor()
-        except _Unsupported as exc:
+        except (_Unsupported, _CapacityExceeded) as exc:
             if not self.fallback:
                 raise
             self.last_path = "fallback"
@@ -166,118 +365,67 @@ class VectorBackend(ExecutorBackend):
                 isect_leader=isect_leader)
 
     def execute_csf(self, plan, tensors, semiring=None, instr=None,
-                    isect_strategy="two_finger") -> Tuple[CSF, Dict]:
-        """Vector path only (no fallback): returns the output as a CSF
-        plus run stats, never materializing per-element Python objects.
-        This is the large-scale entry point used by the throughput
-        benchmark."""
+                    isect_strategy="two_finger",
+                    var_shapes: Optional[Dict[str, int]] = None,
+                    isect_leader=None) -> Tuple[CSF, Dict]:
+        """Vector path only (no fallback): raw CSFs in, CSF out, never
+        materializing per-element Python objects.  Runs the Section-3.2
+        transform pre-pass (``vplan.prepare_csf_inputs``) so
+        partitioned / flattened mappings work straight from storage
+        form.  This is the large-scale entry point used by the
+        throughput benchmark."""
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
-        return self._run_vectorized(plan, tensors, semiring, instr,
-                                    None, isect_strategy)
-
-    # ------------------------------------------------------------------ #
-    # supported-plan analysis
-    # ------------------------------------------------------------------ #
-    def _analyze(self, ex: EinsumExecutor, semiring: Semiring,
-                 out_initial, isect_strategy: str):
-        if out_initial is not None:
-            raise _Unsupported("update-in-place output")
-        if semiring.name != "arith":
-            raise _Unsupported(f"semiring {semiring.name}")
-        einsum = ex.einsum
-        if not einsum.output.indices:
-            raise _Unsupported("bare copy")
-        if any(not ix.is_bare for ix in einsum.output.indices):
-            raise _Unsupported("non-bare output indices")
-        kind, accs = _classify_expr(einsum.expr)
-        for a in accs:
-            if any(not ix.is_bare for ix in a.indices):
-                raise _Unsupported(f"non-bare access {a}")
-        if ex.unmatched_out:
-            raise _Unsupported("output ranks bound at the leaf")
-        plan = ex.plan
-        if any(ri.flattened for ri in plan.loop_order):
-            raise _Unsupported("flattened loop ranks")
-        order = [a.tensor for a in accs]
-        for t in order:
-            if len(ex.drive[t]) != len(plan.tensors[t].exec_order):
-                raise _Unsupported(f"{t}: lookup (non-driving) levels")
-        # per-level driver lists in expression order
-        levels: List[Tuple[str, List[Tuple[str, int]]]] = []
-        for li, ri in enumerate(plan.loop_order):
-            drv = [(t, ex.drive[t][li]) for t in order if li in ex.drive[t]]
-            if len(drv) == 0:
-                raise _Unsupported(f"driverless (dense) rank {ri.name}")
-            if len(drv) > 2:
-                raise _Unsupported(f">2 drivers at rank {ri.name}")
-            if (kind == "product" and len(drv) == 2
-                    and isect_strategy != "two_finger"):
-                raise _Unsupported(f"{isect_strategy} intersection")
-            levels.append((ri.name, drv))
-        if kind == "sum":
-            keys = {t: frozenset(ex.drive[t]) for t in order}
-            all_levels = frozenset(range(len(plan.loop_order)))
-            if any(k != all_levels for k in keys.values()):
-                raise _Unsupported("summands with unaligned ranks")
-        return kind, accs, levels
+        shapes = dict(var_shapes or {})
+        for c in tensors.values():
+            for r, s in getattr(c, "rank_shapes", {}).items():
+                if isinstance(s, int):
+                    v = r.lower()
+                    shapes[v] = max(shapes.get(v, 0), s)
+        vp = lower(plan, shapes, semiring, None, isect_strategy,
+                   isect_leader)
+        exec_csf = prepare_csf_inputs(plan, tensors)
+        return self._run(vp, plan, exec_csf, instr)
 
     # ------------------------------------------------------------------ #
     # the vector loop nest
     # ------------------------------------------------------------------ #
-    def _run_vectorized(self, plan: EinsumPlan, tensors: Dict[str, Any],
-                        semiring: Semiring, instr: Instrumentation,
-                        out_initial, isect_strategy: str
-                        ) -> Tuple[CSF, Dict]:
-        ex = EinsumExecutor(plan, tensors, {}, semiring=semiring,
-                            instr=NullInstr(),
-                            isect_strategy=isect_strategy)
-        kind, accs, levels = self._analyze(ex, semiring, out_initial,
-                                           isect_strategy)
-        name = plan.output
-        csf: Dict[str, CSF] = {}
-        for a in accs:
-            v = tensors[a.tensor]
-            c = v if isinstance(v, CSF) else CSF.from_ftensor(v)
-            if any(c.level_width(d) != 1 for d in range(c.ndim)):
-                raise _Unsupported(f"{a.tensor}: tuple coordinates")
-            csf[a.tensor] = c
-
+    def _run(self, vp: VectorPlan, plan: EinsumPlan,
+             csf: Dict[str, CSF], instr: Instrumentation
+             ) -> Tuple[CSF, Dict]:
         counts: Counter = Counter()
-        leaf_depth = {t: len(plan.tensors[t].exec_order) - 1
-                      for t in csf}
-        out_ranks = plan.tensors[name].exec_order
+        name = vp.name
+        red = vp.reduce
 
-        frontier = _Frontier(1, {t: np.full(1, -2, dtype=np.int64)
-                                 for t in csf}, [])
+        frontier = _Frontier(1, {a.tensor: np.full(1, -2, dtype=np.int64)
+                                 for a in vp.accs}, [], {})
 
         # level 0 first, then (optionally chunked) deeper levels
-        frontier = self._level(0, levels, ex, csf, frontier, counts, kind)
-        chunked = (0 in ex.out_descend and frontier.n > self.chunk_items
-                   and len(levels) > 1)
-        paths_parts: List[np.ndarray] = []
+        frontier = self._level(0, vp, csf, frontier, counts)
+        chunked = (vp.levels[0].out_depth is not None
+                   and frontier.n > self.chunk_items and len(vp.levels) > 1)
+        paths_parts: List[List[np.ndarray]] = []
         vals_parts: List[np.ndarray] = []
         step = self.chunk_items if chunked else max(frontier.n, 1)
         for i0 in range(0, max(frontier.n, 1), step):
             part = frontier.slice(i0, min(i0 + step, frontier.n))
-            for li in range(1, len(levels)):
-                part = self._level(li, levels, ex, csf, part, counts, kind)
-            p, v = self._finalize(part, ex, csf, counts)
+            for li in range(1, len(vp.levels)):
+                part = self._level(li, vp, csf, part, counts)
+            p, v = self._finalize(part, vp, csf, counts)
             if len(v):
                 paths_parts.append(p)
                 vals_parts.append(v)
 
-        if paths_parts:
-            paths = np.concatenate(paths_parts, axis=0)
+        if vals_parts:
+            cols = [np.concatenate([p[d] for p in paths_parts], axis=0)
+                    for d in range(len(red.out_ranks))]
             vals = np.concatenate(vals_parts)
         else:
-            paths = np.zeros((0, len(out_ranks)), dtype=np.int64)
+            cols = [np.zeros((0, w), dtype=np.int64) for w in red.widths]
             vals = np.zeros(0, dtype=np.float64)
         out_csf = _from_sorted_points(
-            name, out_ranks, [paths[:, d:d + 1] for d in range(paths.shape[1])],
-            vals, {r: None for r in out_ranks}, 0,
-            {r for r in out_ranks
-             if plan.created_ranks.get(r) == "upper"})
+            name, red.out_ranks, cols, vals,
+            {r: None for r in red.out_ranks}, 0, set(red.upper_ranks))
 
         self._emit(instr, name, counts)
         stats = {"leaf_points": int(counts.get(("leaf",), 0)),
@@ -285,6 +433,11 @@ class VectorBackend(ExecutorBackend):
                  "out_nnz": int(len(vals))}
         return out_csf, stats
 
+    # ------------------------------------------------------------------ #
+    # stream materialization (the kernel dispatch table lives here:
+    # Drive -> segment expansion; Intersect -> kernels.ops.intersect_keys
+    # (or the probe path for leader-follower); UnionK ->
+    # kernels.ops.union_k_keys; Lookup -> kernels.ops.lookup_keys)
     # ------------------------------------------------------------------ #
     def _ranges(self, c: CSF, d: int, pos: np.ndarray
                 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -302,114 +455,256 @@ class VectorBackend(ExecutorBackend):
         hi = np.where(valid, seg[np.minimum(safe + 1, len(seg) - 1)], 0)
         return lo, hi
 
-    def _level(self, li: int, levels, ex: EinsumExecutor,
-               csf: Dict[str, CSF], fr: _Frontier, counts: Counter,
-               kind: str) -> _Frontier:
-        rank, drv = levels[li]
-        name = ex.name
-        out_here = li in ex.out_descend
-
-        if len(drv) == 1:
-            t, d = drv[0]
-            lo, hi = self._ranges(csf[t], d, fr.pos[t])
-            item_of, elem, _, _ = _expand(lo, hi)
-            coord = csf[t].coords[d][elem, 0]
-            n = len(elem)
-            counts[("touch", t, rank, "coord", "r")] += n
-            counts[("iterate", rank)] += n
-            counts[("advance", rank)] += n
-            if d == self._leaf_depth(ex, t):
-                counts[("touch", t, rank, "payload", "r")] += n
-            nf = fr.take(item_of, coord if out_here else None)
-            nf.pos[t] = elem
-            return nf
-
-        (ta, da), (tb, db) = drv
-        ca, cb = csf[ta], csf[tb]
-        lo_a, hi_a = self._ranges(ca, da, fr.pos[ta])
-        lo_b, hi_b = self._ranges(cb, db, fr.pos[tb])
-        ia, ea, na, offs_a = _expand(lo_a, hi_a)
-        ib, eb, nb, offs_b = _expand(lo_b, hi_b)
-        coord_a = ca.coords[da][ea, 0].astype(np.int64)
-        coord_b = cb.coords[db][eb, 0].astype(np.int64)
-        mult = int(max(coord_a.max(initial=0), coord_b.max(initial=0))) + 1
-        akeys = ia * mult + coord_a
-        bkeys = ib * mult + coord_b
-
-        if kind == "product":
-            from repro.kernels import ops as kops
-            idx = kops.intersect_keys(akeys, bkeys)
-            hit = idx >= 0
-            n_match = int(hit.sum())
-            # two-finger pointer advances: elements <= the other side's
-            # last coordinate (within each item's fiber pair)
-            items = np.arange(fr.n, dtype=np.int64)
-            both = (na > 0) & (nb > 0)
-            bmax = _seg_last(coord_b, offs_b, nb)
-            amax = _seg_last(coord_a, offs_a, na)
-            adv_a = np.where(both, np.searchsorted(
-                akeys, items * mult + bmax, side="right") - offs_a[:-1], 0)
-            adv_b = np.where(both, np.searchsorted(
-                bkeys, items * mult + amax, side="right") - offs_b[:-1], 0)
-            touched_a = np.minimum(adv_a + 1, na)
-            touched_b = np.minimum(adv_b + 1, nb)
-            counts[("touch", ta, rank, "coord", "r")] += int(touched_a.sum())
-            counts[("touch", tb, rank, "coord", "r")] += int(touched_b.sum())
-            counts[("isect_step", rank, ta)] += int(adv_a.sum())
-            counts[("isect_step", rank, tb)] += int(adv_b.sum())
-            counts[("isect_match", rank)] += n_match
-            counts[("iterate", rank)] += n_match
-            counts[("advance", rank)] += n_match
-            if da == self._leaf_depth(ex, ta):
-                counts[("touch", ta, rank, "payload", "r")] += n_match
-            if db == self._leaf_depth(ex, tb):
-                counts[("touch", tb, rank, "payload", "r")] += n_match
-            sel = np.flatnonzero(hit)
-            nf = fr.take(ia[sel], coord_a[sel] if out_here else None)
-            nf.pos[ta] = ea[sel]
-            nf.pos[tb] = eb[idx[sel]]
-            return nf
-
-        # union (additive expression)
-        from repro.kernels import ops as kops
-        ukeys, pa, pb = kops.union_keys(akeys, bkeys)
-        n_u = len(ukeys)
-        item_u = ukeys // mult
-        coord_u = ukeys % mult
-        counts[("touch", ta, rank, "coord", "r")] += int(len(akeys))
-        counts[("touch", tb, rank, "coord", "r")] += int(len(bkeys))
-        counts[("iterate", rank)] += n_u
-        counts[("advance", rank)] += n_u
-        present_a = pa >= 0
-        present_b = pb >= 0
-        if da == self._leaf_depth(ex, ta):
-            counts[("touch", ta, rank, "payload", "r")] += int(present_a.sum())
-        if db == self._leaf_depth(ex, tb):
-            counts[("touch", tb, rank, "payload", "r")] += int(present_b.sum())
-        nf = fr.take(item_u, coord_u if out_here else None)
-        pos_a = np.full(n_u, -1, dtype=np.int64)
-        pos_b = np.full(n_u, -1, dtype=np.int64)
-        if len(ea):
-            pos_a[present_a] = ea[pa[present_a]]
-        if len(eb):
-            pos_b[present_b] = eb[pb[present_b]]
-        nf.pos[ta] = pos_a
-        nf.pos[tb] = pos_b
-        return nf
+    def _drive_raw(self, node: Drive, csf, fr, width: int):
+        c = csf[node.tensor]
+        lo, hi = self._ranges(c, node.depth, fr.pos[node.tensor])
+        item_of, elem, cnts, offs = _expand(lo, hi)
+        coord = c.coords[node.depth][elem]
+        if coord.shape[1] != width:
+            assert len(coord) == 0, \
+                f"{node.tensor}: coordinate width {coord.shape[1]} != " \
+                f"plan width {width}"
+            coord = coord.reshape(0, width)
+        return item_of, elem, cnts, offs, coord
 
     @staticmethod
-    def _leaf_depth(ex: EinsumExecutor, t: str) -> int:
-        return len(ex.plan.tensors[t].exec_order) - 1
+    def _collect_drives(op, out: List[Drive]) -> None:
+        if isinstance(op, Drive):
+            out.append(op)
+        else:
+            for ch in getattr(op, "children", ()):
+                VectorBackend._collect_drives(ch, out)
+
+    def _materialize_level(self, lvl: LevelIR, csf, fr: _Frontier):
+        """Build all Drive streams with a shared coordinate packing,
+        then compose the op tree."""
+        drives: List[Drive] = []
+        self._collect_drives(lvl.op, drives)
+        raw = {id(n): self._drive_raw(n, csf, fr, lvl.width)
+               for n in drives}
+        packing: List = []
+
+        def ensure_keys(st: _Stream) -> np.ndarray:
+            # lazy: only co-iterating nodes pack sort keys; a level with
+            # a single driver never pays the domain scan at all
+            if st.keys is None:
+                if not packing:
+                    packing.append(_pack_factors(
+                        lvl.width, [r[4] for r in raw.values()], fr.n))
+                _, factors, item_mult = packing[0]
+                keys = st.item_of * item_mult
+                for j in range(st.coord.shape[1]):
+                    keys = keys + st.coord[:, j].astype(np.int64) \
+                        * factors[j]
+                st.keys = keys
+            return st.keys
+
+        def item_mult_of() -> int:
+            assert packing, "union children must have packed keys"
+            return packing[0][2]
+
+        def build(op):
+            if isinstance(op, Drive):
+                item_of, elem, cnts, offs, coord = raw[id(op)]
+                return _RtDrive(op, _Stream(None, item_of, cnts, offs,
+                                            coord, {op.tensor: elem}))
+            if isinstance(op, Intersect):
+                rt = build(op.children[0])
+                for ch in op.children[1:]:
+                    rt = self._pair(rt, build(ch), op, fr.n, ensure_keys)
+                return rt
+            assert isinstance(op, UnionK)
+            return self._union([build(ch) for ch in op.children], fr.n,
+                               item_mult_of, ensure_keys)
+        return build(lvl.op)
+
+    def _pair(self, left, right, op: Intersect, n_items: int, ensure_keys):
+        from repro.kernels import ops as kops
+        ls, rs = left.stream, right.stream
+        lkeys, rkeys = ensure_keys(ls), ensure_keys(rs)
+        lf = (op.strategy == "leader_follower"
+              and isinstance(left, _RtDrive) and isinstance(right, _RtDrive))
+        if lf:
+            if left.node.tensor == op.leader:
+                lead_is_left = np.ones(n_items, dtype=bool)
+            elif right.node.tensor == op.leader:
+                lead_is_left = np.zeros(n_items, dtype=bool)
+            else:
+                # no explicit leader among the pair: lead with the
+                # smaller fiber (the dynamic choice real units make)
+                lead_is_left = ls.counts <= rs.counts
+        idx = kops.intersect_keys(lkeys, rkeys)
+        hit = idx >= 0
+        sel = np.flatnonzero(hit)
+        item_of = ls.item_of[sel]
+        cnts = np.bincount(item_of, minlength=n_items).astype(np.int64)
+        offs = np.zeros(n_items + 1, dtype=np.int64)
+        np.cumsum(cnts, out=offs[1:])
+        pos = {t: p[sel] for t, p in ls.pos.items()}
+        idx_sel = idx[sel]
+        for t, p in rs.pos.items():
+            pos[t] = p[idx_sel]
+        st = _Stream(lkeys[sel], item_of, cnts, offs, ls.coord[sel], pos)
+        if lf:
+            return _RtLF(left, right, st, sel, idx_sel, lead_is_left)
+        both = (ls.counts > 0) & (rs.counts > 0)
+        lmax = lkeys[np.maximum(ls.offs[1:] - 1, 0)] if ls.n else \
+            np.zeros(n_items, dtype=np.int64)
+        rmax = rkeys[np.maximum(rs.offs[1:] - 1, 0)] if rs.n else \
+            np.zeros(n_items, dtype=np.int64)
+        adv_l = np.where(both, np.searchsorted(lkeys, rmax, side="right")
+                         - ls.offs[:-1], 0)
+        adv_r = np.where(both, np.searchsorted(rkeys, lmax, side="right")
+                         - rs.offs[:-1], 0)
+        return _RtPair(left, right, st, sel, idx_sel, adv_l, adv_r)
+
+    def _union(self, children, n_items: int, item_mult_of, ensure_keys):
+        from repro.kernels import ops as kops
+        streams = [c.stream for c in children]
+        u, pos_list = kops.union_k_keys([ensure_keys(s) for s in streams])
+        item_of = u // max(item_mult_of(), 1)
+        cnts = np.bincount(item_of, minlength=n_items).astype(np.int64)
+        offs = np.zeros(n_items + 1, dtype=np.int64)
+        np.cumsum(cnts, out=offs[1:])
+        width = streams[0].coord.shape[1]
+        coord = np.zeros((len(u), width), dtype=streams[0].coord.dtype)
+        pos: Dict[str, np.ndarray] = {}
+        members = []
+        for s, cpos in zip(streams, pos_list):
+            m = cpos >= 0
+            members.append(m)
+            if m.any():
+                coord[m] = s.coord[cpos[m]]
+            for t, p in s.pos.items():
+                col = np.full(len(u), -1, dtype=np.int64)
+                if m.any():
+                    col[m] = p[cpos[m]]
+                pos[t] = col
+        st = _Stream(u, item_of, cnts, offs, coord, pos)
+        return _RtUnion(children, st, members)
 
     # ------------------------------------------------------------------ #
-    def _finalize(self, fr: _Frontier, ex: EinsumExecutor,
-                  csf: Dict[str, CSF], counts: Counter
-                  ) -> Tuple[np.ndarray, np.ndarray]:
-        """Leaf evaluation + segmented in-order reduction."""
-        name = ex.name
+    def _level(self, li: int, vp: VectorPlan, csf, fr: _Frontier,
+               counts: Counter) -> _Frontier:
+        lvl = vp.levels[li]
+        rank = lvl.rank
+        out_here = lvl.out_depth is not None
+
+        if isinstance(lvl.op, DenseEnumerate):
+            shape = lvl.op.shape
+            n = fr.n * shape
+            item_of = np.repeat(np.arange(fr.n, dtype=np.int64), shape)
+            coord = np.tile(np.arange(shape, dtype=np.int64), fr.n)[:, None]
+            counts[("iterate", rank)] += n
+            counts[("advance", rank)] += n
+            nf = fr.take(item_of, coord if out_here else None)
+        else:
+            rt = self._materialize_level(lvl, csf, fr)
+            st = rt.stream
+            n = st.n
+            counts[("iterate", rank)] += n
+            counts[("advance", rank)] += n
+            rt.account(counts, rank, st.counts.copy(),
+                       np.ones(fr.n, dtype=bool))
+            # matched elements descend: deepest levels touch payloads
+            drives: List[Drive] = []
+            self._collect_drives(lvl.op, drives)
+            for node in drives:
+                if node.leaf:
+                    present = int((st.pos[node.tensor] >= 0).sum())
+                    if present:
+                        counts[("touch", node.tensor, rank,
+                                "payload", "r")] += present
+            coord = st.coord
+            nf = fr.take(st.item_of, coord if out_here else None)
+            for t, p in st.pos.items():
+                nf.pos[t] = p
+
+        if lvl.binds:
+            for v, (lv, col) in vp.capture_vars.items():
+                if lv == li:
+                    nf.var_cols[v] = coord[:, col].copy() if len(coord) \
+                        else np.zeros(0, dtype=np.int64)
+
+        if lvl.lookups:
+            dead = np.zeros(nf.n, dtype=bool)
+            for lk in lvl.lookups:
+                dead |= self._lookup(lk, csf, nf, counts)
+            if dead.any():
+                nf = nf.filter(~dead)
+        return nf
+
+    # ------------------------------------------------------------------ #
+    def _lookup(self, lk: Lookup, csf, fr: _Frontier,
+                counts: Counter) -> np.ndarray:
+        """Catch-up descent of one tensor level by bound coordinate.
+        Returns the per-item dead mask (essential misses)."""
+        from repro.kernels import ops as kops
+        c = csf[lk.tensor]
+        d = lk.depth
+        n = fr.n
+        if d == 0:
+            parent = np.zeros(n, dtype=np.int64)
+            pvalid = np.ones(n, dtype=bool)
+        else:
+            parent = fr.pos[lk.tensor]
+            pvalid = parent >= 0
+        level_coord = c.coords[d].astype(np.int64)
+        w = len(lk.vars)
+        if level_coord.shape[1] != w:
+            assert len(level_coord) == 0
+            level_coord = level_coord.reshape(0, w)
+        probe = np.stack([fr.var_cols[v] for v in lk.vars], axis=1) \
+            if n else np.zeros((0, w), dtype=np.int64)
+        par_of = c.expand_level(d)
+        # probe coordinates can exceed the stored domain: the packing
+        # must cover both, or a too-large probe would alias into the
+        # next parent's key range
+        _, factors, seg_mult = _pack_factors(
+            w, [level_coord, probe], max(int(par_of.max(initial=0)) + 1, 1))
+        hay = par_of * seg_mult + level_coord @ factors
+        probe_keys = np.where(pvalid, parent, 0) * seg_mult \
+            + (probe @ factors)
+
+        if lk.partition_start:
+            # position by range: largest coordinate <= target within the
+            # parent fiber (missing -> absent, without a coordinate read)
+            ins = np.searchsorted(hay, probe_keys, side="right") - 1
+            safe = np.maximum(ins, 0)
+            found = pvalid & (ins >= 0)
+            if len(hay):
+                found &= (hay[safe] // max(seg_mult, 1)) == \
+                    np.where(pvalid, parent, 0)
+            else:
+                found[:] = False
+            pos = np.where(found, safe, -1)
+            n_touch = int(found.sum())
+        else:
+            idx = kops.lookup_keys(hay, probe_keys)
+            pos = np.where(pvalid, idx, -1)
+            found = pos >= 0
+            n_touch = int(pvalid.sum())
+        if n_touch:
+            counts[("touch", lk.tensor, lk.rank, "coord", "r")] += n_touch
+        n_hit = int(found.sum())
+        if lk.leaf and n_hit:
+            counts[("touch", lk.tensor, lk.rank, "payload", "r")] += n_hit
+        fr.pos[lk.tensor] = pos
+        if lk.essential:
+            return ~found
+        return np.zeros(n, dtype=bool)
+
+    # ------------------------------------------------------------------ #
+    def _finalize(self, fr: _Frontier, vp: VectorPlan, csf,
+                  counts: Counter) -> Tuple[List[np.ndarray], np.ndarray]:
+        """Leaf evaluation + segmented in-order reduction (Reduce)."""
+        name = vp.name
+        red = vp.reduce
         counts[("leaf",)] += fr.n
         leafvals: Dict[str, np.ndarray] = {}
-        for t, c in csf.items():
+        for a in vp.accs:
+            t = a.tensor
+            c = csf[t]
             pos = fr.pos[t]
             v = np.zeros(fr.n, dtype=np.float64)
             present = pos >= 0
@@ -420,6 +715,12 @@ class VectorBackend(ExecutorBackend):
         def ev(e) -> np.ndarray:
             if isinstance(e, TensorAccess):
                 return leafvals[e.tensor]
+            if isinstance(e, Take):
+                vals = [ev(a) for a in e.args]
+                mask = np.ones(fr.n, dtype=bool)
+                for v in vals:
+                    mask &= v != 0
+                return np.where(mask, vals[e.which], 0.0)
             assert isinstance(e, BinOp)
             lv, rv = ev(e.lhs), ev(e.rhs)
             if e.op == "*":
@@ -433,21 +734,55 @@ class VectorBackend(ExecutorBackend):
             counts[("compute", "add")] += lv.size
             return lv - rv
 
-        vals = ev(ex.einsum.expr)
-        if fr.out_cols:
-            paths = np.stack(fr.out_cols, axis=1)
-        else:
-            paths = np.zeros((fr.n, 0), dtype=np.int64)
+        vals = ev(vp.expr)
+        # output coordinate columns per exec-order rank
+        cols: List[np.ndarray] = []
+        lvl_cols = iter(fr.out_cols)
+        for src, wdt in zip(red.sources, red.widths):
+            if src[0] == "level":
+                cols.append(next(lvl_cols))
+            else:
+                vs = src[1]
+                cols.append(np.stack([fr.var_cols[v] for v in vs], axis=1)
+                            if fr.n else np.zeros((0, wdt), dtype=np.int64))
+        paths = np.concatenate(cols, axis=1) if cols else \
+            np.zeros((fr.n, 0), dtype=np.int64)
         nz = np.flatnonzero(vals != 0)
         paths, vals = paths[nz], vals[nz]
+        widths = red.widths
+
+        def split(p):
+            out, col = [], 0
+            for w in widths:
+                out.append(p[:, col:col + w])
+                col += w
+            return out
+
         if len(vals) == 0:
-            return paths, vals
+            return split(paths), vals
         ncol = paths.shape[1]
-        order = np.lexsort(tuple(paths[:, c] for c in range(ncol - 1, -1, -1)))
+        # one fused-key stable sort beats a column-wise lexsort; fall
+        # back to lexsort when the packed coordinate domain overflows
+        mults = [int(paths[:, c].max()) + 1 for c in range(ncol)]
+        total_mult = 1.0
+        for m in mults:
+            total_mult *= m
+        key = None
+        if total_mult < float(1 << 62):
+            key = np.zeros(len(vals), dtype=np.int64)
+            for c in range(ncol):
+                key *= mults[c]
+                key += paths[:, c]
+            order = np.argsort(key, kind="stable")
+            key = key[order]
+        else:
+            order = np.lexsort(tuple(paths[:, c]
+                                     for c in range(ncol - 1, -1, -1)))
         paths, vals = paths[order], vals[order]
         boundary = np.ones(len(vals), dtype=bool)
         if len(vals) > 1:
-            boundary[1:] = np.any(paths[1:] != paths[:-1], axis=1)
+            boundary[1:] = (key[1:] != key[:-1]) if key is not None else \
+                np.any(paths[1:] != paths[:-1], axis=1)
         starts = np.flatnonzero(boundary)
         group_counts = np.diff(np.append(starts, len(vals)))
         sums = vals[starts].copy()
@@ -460,13 +795,13 @@ class VectorBackend(ExecutorBackend):
                 break
             sums[act] = sums[act] + vals[starts[act] + step]
             step += 1
-        out_rank = ex.plan.tensors[name].exec_order[-1]
+        out_rank = red.out_ranks[-1]
         n_contrib = len(vals)
         n_out = len(starts)
         counts[("touch", name, out_rank, "payload", "w")] += n_contrib
         counts[("touch", name, out_rank, "payload", "r")] += n_contrib - n_out
         counts[("compute", "add")] += n_contrib - n_out
-        return paths[starts], sums
+        return split(paths[starts]), sums
 
     # ------------------------------------------------------------------ #
     def _emit(self, instr: Instrumentation, name: str,

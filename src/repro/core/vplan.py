@@ -1,0 +1,444 @@
+"""VectorPlan: the typed per-rank IR the columnar ``VectorBackend`` runs.
+
+``lower(plan, ...)`` turns an ``EinsumPlan`` into a ``VectorPlan`` -- a
+per-loop-rank list of typed co-iteration ops plus a ``Reduce`` describing
+output construction:
+
+  * ``Drive``           enumerate one tensor level's fibers
+  * ``Intersect``       co-iterate factors of a product / ``take()``
+                        (two-finger or leader-follower, any arity,
+                        left-nested pairwise exactly like the
+                        interpreter's ``_intersect_many``)
+  * ``UnionK``          k-ary sorted merge across additive terms
+  * ``DenseEnumerate``  driverless (dense) rank: iterate the index
+                        var's full coordinate range
+  * ``Lookup``          catch-up descent of a non-driving tensor level
+                        by bound coordinate (exact match, or
+                        partition-upper range positioning)
+  * ``Reduce``          leaf evaluation + segmented reduction into the
+                        output, with per-rank coordinate sources
+                        (loop-captured or recovered from index-var
+                        bindings for leaf-bound output ranks)
+
+``_Unsupported`` is raised **only here**, never mid-execution: if
+``lower`` returns, the vector path can run the plan.  What remains
+outside the IR -- affine / constant indices, non-arithmetic semirings,
+update-in-place outputs, bare copies, sums of non-atomic or
+rank-unaligned terms -- falls back to the interpreter per Einsum.
+
+``prepare_csf_inputs`` is the pre-pass for the columnar entry point
+(``VectorBackend.execute_csf``): it applies the Einsum's Section-3.2
+transform recipe (swizzle / flatten / uniform partitioning, recorded on
+``EinsumPlan.transform_recipe``) directly on CSF arrays, so
+SIGMA-style flattened and OuterSPACE-style partitioned workloads run
+at scale without ever materializing per-element fibertrees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .einsum import BinOp, Semiring, Take, TensorAccess
+from .iteration import EinsumExecutor
+from .mapping import EinsumPlan
+from .trace import NullInstr
+
+
+class _Unsupported(Exception):
+    """Plan shape the vector path does not cover (-> fallback)."""
+
+
+# ---------------------------------------------------------------------- #
+# IR node types
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Drive:
+    """Enumerate the fibers of one tensor level."""
+    tensor: str
+    depth: int
+    leaf: bool                       # deepest level: matches touch payloads
+
+
+@dataclass(frozen=True)
+class Intersect:
+    """Product / take() co-iteration; executed as a left-nested chain of
+    pairwise merges (``((c0 ^ c1) ^ c2) ...``), mirroring the
+    interpreter.  ``leader_follower`` applies to Drive/Drive pairs only
+    (deeper pairs two-finger), again mirroring the interpreter."""
+    children: Tuple = ()
+    strategy: str = "two_finger"
+    leader: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class UnionK:
+    """k-ary sorted union across additive terms."""
+    children: Tuple = ()
+
+
+@dataclass(frozen=True)
+class DenseEnumerate:
+    """Driverless rank: iterate ``range(shape)`` of the index var."""
+    var: str
+    shape: int
+
+
+@dataclass(frozen=True)
+class Lookup:
+    """Catch-up descent of one non-driving tensor level, probed by the
+    coordinate computed from index-var bindings."""
+    tensor: str
+    depth: int
+    rank: str
+    vars: Tuple[str, ...]
+    partition_start: bool            # position-by-range (upper partition)
+    leaf: bool
+    essential: bool                  # miss kills the branch
+
+
+@dataclass
+class LevelIR:
+    """One loop rank: its co-iteration op, binding info, the output
+    descend depth (if an output rank sits here), and the catch-up
+    lookups scheduled right after its bindings land."""
+    rank: str
+    width: int
+    binds: bool
+    vars: Tuple[str, ...]
+    out_depth: Optional[int]
+    op: object                       # Drive | Intersect | UnionK | DenseEnumerate
+    lookups: List[Lookup] = field(default_factory=list)
+
+
+@dataclass
+class Reduce:
+    """Output construction: per exec-order output rank, where its
+    coordinates come from -- ("level", li) for loop-matched ranks,
+    ("vars", vars) for leaf-bound ranks recovered from bindings."""
+    out_ranks: List[str]
+    sources: List[Tuple]
+    widths: List[int]
+    upper_ranks: Set[str]
+
+
+@dataclass
+class VectorPlan:
+    name: str
+    expr: object
+    accs: List[TensorAccess]
+    levels: List[LevelIR]
+    reduce: Reduce
+    essential: Set[str]
+    leaf_depth: Dict[str, int]
+    #: index vars whose bound values must be captured as frontier
+    #: columns (lookup probes + leaf-bound output coordinates):
+    #: var -> (loop level, coordinate column at that level)
+    capture_vars: Dict[str, Tuple[int, int]]
+
+
+# ---------------------------------------------------------------------- #
+# expression shape validation
+# ---------------------------------------------------------------------- #
+def _walk_expr(expr, accs: List[TensorAccess], has_sum: List[bool]) -> None:
+    if isinstance(expr, TensorAccess):
+        for ix in expr.indices:
+            if not ix.is_bare:
+                raise _Unsupported(f"non-bare access {expr}")
+        accs.append(expr)
+        return
+    if isinstance(expr, Take):
+        for a in expr.args:
+            _walk_expr(a, accs, has_sum)
+        return
+    if isinstance(expr, BinOp):
+        if expr.op in "+-":
+            has_sum[0] = True
+        elif expr.op != "*":
+            raise _Unsupported(f"operator {expr.op!r}")
+        _walk_expr(expr.lhs, accs, has_sum)
+        _walk_expr(expr.rhs, accs, has_sum)
+        return
+    raise _Unsupported(f"expression node {expr!r}")
+
+
+def _sum_terms(expr) -> List:
+    """Flatten an additive expression into its terms (each term must be
+    a plain access for the vector path)."""
+    if isinstance(expr, BinOp) and expr.op in "+-":
+        return _sum_terms(expr.lhs) + _sum_terms(expr.rhs)
+    return [expr]
+
+
+# ---------------------------------------------------------------------- #
+# lowering
+# ---------------------------------------------------------------------- #
+def _build_op(expr, active: Set[str], leaf_depth: Dict[str, int],
+              depth_at: Dict[str, int], essential: Set[str],
+              strategy: str, leader: Optional[str]):
+    """Co-iteration op tree for one level, mirroring the interpreter's
+    ``_build_coiter``: intersection across product/take factors, union
+    across additive terms; inactive operands drop out."""
+    if isinstance(expr, TensorAccess):
+        t = expr.tensor
+        if t not in active:
+            return None
+        d = depth_at[t]
+        return Drive(t, d, d == leaf_depth[t])
+    if isinstance(expr, Take):
+        children = [_build_op(a, active, leaf_depth, depth_at, essential,
+                              strategy, leader) for a in expr.args]
+        children = [c for c in children if c is not None]
+        return _isect_many(children, essential, strategy, leader)
+    if isinstance(expr, BinOp):
+        lhs = _build_op(expr.lhs, active, leaf_depth, depth_at, essential,
+                        strategy, leader)
+        rhs = _build_op(expr.rhs, active, leaf_depth, depth_at, essential,
+                        strategy, leader)
+        if expr.op == "*":
+            children = [c for c in (lhs, rhs) if c is not None]
+            return _isect_many(children, essential, strategy, leader)
+        if lhs is None:
+            return rhs
+        if rhs is None:
+            return lhs
+        lparts = lhs.children if isinstance(lhs, UnionK) else (lhs,)
+        rparts = rhs.children if isinstance(rhs, UnionK) else (rhs,)
+        return UnionK(lparts + rparts)
+    return None
+
+
+def _op_tensors(op) -> Set[str]:
+    if isinstance(op, Drive):
+        return {op.tensor}
+    out: Set[str] = set()
+    for c in getattr(op, "children", ()):
+        out |= _op_tensors(c)
+    return out
+
+
+def _isect_many(children: List, essential: Set[str], strategy: str,
+                leader: Optional[str]):
+    if not children:
+        return None
+    if len(children) == 1:
+        return children[0]
+    # an absent operand under an intersection would degrade it to the
+    # remaining factors (interpreter semantics); that cannot happen when
+    # every factor annihilates the expression (essential), which the
+    # plain product / take() cascades all satisfy
+    for c in children:
+        if not _op_tensors(c) <= essential:
+            raise _Unsupported("intersection over possibly-absent operands")
+    return Intersect(tuple(children), strategy, leader)
+
+
+def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
+          semiring: Optional[Semiring] = None,
+          out_initial=None, isect_strategy: str = "two_finger",
+          isect_leader: Optional[str] = None) -> VectorPlan:
+    """EinsumPlan -> VectorPlan, or raise ``_Unsupported``."""
+    semiring = semiring or Semiring.arithmetic()
+    if out_initial is not None:
+        raise _Unsupported("update-in-place output")
+    if semiring.name != "arith":
+        raise _Unsupported(f"semiring {semiring.name}")
+    einsum = plan.einsum
+    if not einsum.output.indices:
+        raise _Unsupported("bare copy")
+    if any(not ix.is_bare for ix in einsum.output.indices):
+        raise _Unsupported("non-bare output indices")
+
+    accs: List[TensorAccess] = []
+    has_sum = [False]
+    _walk_expr(einsum.expr, accs, has_sum)
+    if not accs:
+        raise _Unsupported("no tensor operands")
+    if has_sum[0]:
+        for term in _sum_terms(einsum.expr):
+            if not isinstance(term, TensorAccess):
+                raise _Unsupported("sum of non-atomic terms")
+
+    # the interpreter's own analysis is the single source of truth for
+    # drive/lookup level assignment and output descent
+    try:
+        ex = EinsumExecutor(plan, {}, var_shapes, semiring=semiring,
+                            instr=NullInstr(),
+                            isect_strategy=isect_strategy,
+                            isect_leader=isect_leader)
+    except (ValueError, AssertionError) as e:
+        raise _Unsupported(str(e))
+
+    loop = plan.loop_order
+    leaf_depth = {a.tensor: len(plan.tensors[a.tensor].exec_order) - 1
+                  for a in accs}
+    order = [a.tensor for a in accs]
+
+    if has_sum[0]:
+        all_levels = frozenset(range(len(loop)))
+        for t in order:
+            if frozenset(ex.drive[t]) != all_levels:
+                raise _Unsupported("summands with unaligned ranks")
+
+    # loop level at which each var binds
+    var_bound_at: Dict[str, int] = {}
+    for li, ri in enumerate(loop):
+        if ri.binds:
+            for v in ri.vars:
+                var_bound_at[v] = li
+
+    # ---- per-level ops
+    levels: List[LevelIR] = []
+    for li, ri in enumerate(loop):
+        active = {t for t in order if li in ex.drive[t]}
+        depth_at = {t: ex.drive[t][li] for t in active}
+        op = _build_op(einsum.expr, active, leaf_depth, depth_at,
+                       ex._essential, isect_strategy, isect_leader)
+        if op is None:
+            if ri.flattened:
+                raise _Unsupported(f"driverless flattened rank {ri.name}")
+            var = ri.vars[0]
+            shape = var_shapes.get(var)
+            if shape is None:
+                raise _Unsupported(f"unknown shape for dense rank {ri.name}")
+            op = DenseEnumerate(var, int(shape))
+        levels.append(LevelIR(rank=ri.name, width=len(ri.vars),
+                              binds=ri.binds, vars=ri.vars,
+                              out_depth=ex.out_descend.get(li), op=op))
+
+    # ---- catch-up lookups: schedule every non-driving tensor level at
+    # the first binding loop level where its coordinate is computable
+    # and its parent level has been descended
+    for t in order:
+        tp = plan.tensors[t]
+        drive = ex.drive[t]
+        depth_level: Dict[int, int] = {}     # depth -> loop level available
+        drive_depths = set(drive.values())
+        next_drive_after = sorted(drive.items())
+        for d in range(len(tp.exec_order)):
+            if d in drive_depths:
+                lv = next(l for l, dd in drive.items() if dd == d)
+                depth_level[d] = lv
+                continue
+            rank = tp.exec_order[d]
+            vars_ = ex._level_vars(None, tp, d, rank)
+            if not vars_:
+                raise _Unsupported(f"{t}: lookup level {rank} binds no vars")
+            need = max((var_bound_at.get(v, len(loop)) for v in vars_),
+                       default=0)
+            if need >= len(loop):
+                raise _Unsupported(f"{t}: unbound lookup level {rank}")
+            prior = depth_level.get(d - 1, -1) if d > 0 else -1
+            lv = max(need, prior)
+            # catch-up runs only after binding levels
+            while lv < len(loop) and not loop[lv].binds:
+                lv += 1
+            if lv >= len(loop):
+                raise _Unsupported(f"{t}: no binding level for {rank}")
+            nxt = next((l for l, dd in next_drive_after if dd > d), None)
+            if nxt is not None and lv >= nxt:
+                raise _Unsupported(
+                    f"{t}: lookup level {rank} resolves after its next "
+                    f"driving level")
+            depth_level[d] = lv
+            # partition-created upper levels position by range; the
+            # plan's created_ranks map is authoritative (a *declared*
+            # rank whose name happens to end in a digit is exact-match)
+            part = plan.created_ranks.get(rank) == "upper"
+            levels[lv].lookups.append(Lookup(
+                tensor=t, depth=d, rank=rank, vars=tuple(vars_),
+                partition_start=part, leaf=(d == leaf_depth[t]),
+                essential=(t in ex._essential)))
+
+    # every lookup var and leaf-bound output var must be capturable
+    out_ranks = list(plan.tensors[plan.output].exec_order)
+    matched = {}
+    for li, lvl in enumerate(levels):
+        if lvl.out_depth is not None:
+            matched[lvl.out_depth] = li
+    sources: List[Tuple] = []
+    widths: List[int] = []
+    needed_vars: Set[str] = set()
+    for d, r in enumerate(out_ranks):
+        if d in matched:
+            sources.append(("level", matched[d]))
+            widths.append(levels[matched[d]].width)
+        else:
+            vars_ = ex._rank_vars(r)
+            sources.append(("vars", tuple(vars_)))
+            widths.append(len(vars_))
+            needed_vars.update(vars_)
+    for lvl in levels:
+        for lk in lvl.lookups:
+            needed_vars.update(lk.vars)
+
+    capture_vars: Dict[str, Tuple[int, int]] = {}
+    for li, ri in enumerate(loop):
+        if ri.binds:
+            for col, v in enumerate(ri.vars):
+                if v in needed_vars and v not in capture_vars:
+                    capture_vars[v] = (li, col)
+    missing = needed_vars - set(capture_vars)
+    if missing:
+        raise _Unsupported(f"uncapturable index vars {sorted(missing)}")
+
+    red = Reduce(out_ranks=out_ranks, sources=sources, widths=widths,
+                 upper_ranks={r for r in out_ranks
+                              if plan.created_ranks.get(r) == "upper"})
+    return VectorPlan(name=plan.output, expr=einsum.expr, accs=accs,
+                      levels=levels, reduce=red, essential=set(ex._essential),
+                      leaf_depth=leaf_depth, capture_vars=capture_vars)
+
+
+# ---------------------------------------------------------------------- #
+# pre-pass: Section-3.2 transforms on CSF arrays
+# ---------------------------------------------------------------------- #
+def prepare_csf_inputs(plan: EinsumPlan, tensors: Dict) -> Dict:
+    """Apply the Einsum's recorded transform recipe (flatten / uniform
+    partitioning / concordant swizzle) to raw CSF inputs, returning
+    execution-form CSFs.  Mirrors ``MappingResolver.transform_tensor``
+    but stays columnar end-to-end; leader-follower occupancy adoption
+    (dynamic per-fiber boundaries) is not expressible on arrays and
+    raises ``_Unsupported``."""
+    out: Dict = {}
+    for name, cur in tensors.items():
+        tp = plan.tensors.get(name)
+        if tp is None:
+            out[name] = cur
+            continue
+        for step in plan.transform_recipe.get(name, ()):
+            if step[0] == "flatten":
+                key = step[1]
+                if not all(r in cur.ranks for r in key):
+                    continue
+                others = [r for r in cur.ranks if r not in key]
+                idx = min(cur.ranks.index(r) for r in key)
+                new_order = others[:idx] + list(key) + others[idx:]
+                if new_order != cur.ranks:
+                    cur = cur.swizzle(new_order)
+                acc = key[0]
+                for r in key[1:]:
+                    cur = cur.flatten_ranks(acc, r)
+                    acc = acc + r
+            else:
+                _, key, dirs = step
+                if key not in cur.ranks:
+                    continue
+                seg = key
+                produced: List[str] = []
+                for kind, size, leader in dirs:
+                    if kind == "occupancy" and leader not in (None, name):
+                        raise _Unsupported(
+                            f"{name}: leader-follower occupancy adoption "
+                            f"(leader {leader}) needs the fibertree path")
+                    cur = (cur.partition_uniform_shape(seg, size)
+                           if kind == "shape"
+                           else cur.partition_uniform_occupancy(seg, size))
+                    produced.append(seg + "1")
+                    seg = seg + "0"
+                final = [f"{key}{i}" for i in range(len(dirs), 0, -1)] \
+                    + [f"{key}0"]
+                cur = cur.rename_ranks(dict(zip(produced + [seg], final)))
+        if list(cur.ranks) != list(tp.exec_order):
+            cur = cur.swizzle(tp.exec_order)
+        out[name] = cur
+    return out

@@ -129,6 +129,68 @@ def merge_sorted(a: jnp.ndarray, b: jnp.ndarray, block: int = 1024,
 
 
 # ---------------------------------------------------------------------- #
+# k-ary multi-merge kernel: each element of each of the k sorted input
+# rows finds its global rank in the merged stream with k-1 vectorized
+# binary searches (stable: ties resolve by row index).  The union dual
+# of stacking pairwise merge-path calls, in one launch.
+# ---------------------------------------------------------------------- #
+def _multi_merge_kernel(arrs_ref, rank_ref, *, k: int, n: int, block: int):
+    a_all = arrs_ref[...]                              # [k, n] int32 sorted
+    i = pl.program_id(0)                               # which row
+    jb = pl.program_id(1)                              # which block
+    e = jax.lax.dynamic_slice(a_all, (i, jb * block), (1, block))[0]
+    own = jb * block + jnp.arange(block, dtype=jnp.int32)
+    total = own                                        # own stable position
+    steps = max(1, n.bit_length())
+
+    for jj in range(k):                                # static unroll over rows
+        row = a_all[jj]
+
+        def search(inclusive: bool):
+            lo = jnp.zeros(e.shape, jnp.int32)
+            hi = jnp.full(e.shape, n, jnp.int32)
+
+            def body(_, carry):
+                lo, hi = carry
+                mid = (lo + hi) // 2
+                rv = row[jnp.clip(mid, 0, n - 1)]
+                # freeze once converged (lo == hi) so the fixed-step
+                # loop cannot overshoot past n
+                go_right = (lo < hi) & (rv <= e if inclusive else rv < e)
+                lo = jnp.where(go_right, mid + 1, lo)
+                hi = jnp.where(go_right, hi, mid)
+                return lo, hi
+
+            lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+            return lo
+
+        cnt_le = search(True)                          # elements <= e
+        cnt_lt = search(False)                         # elements <  e
+        contrib = jnp.where(jj < i, cnt_le, jnp.where(jj > i, cnt_lt, 0))
+        total = total + contrib
+    rank_ref[...] = total[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def multi_merge_ranks(arrs: jnp.ndarray, block: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """arrs: [k, n] int32, each row sorted and PAD-padded.  Returns the
+    [k, n] global rank of every element in the stable k-way merge
+    (pad ranks are meaningless; callers slice to the real lengths)."""
+    k, n = arrs.shape
+    block = min(block, n)
+    grid = (k, pl.cdiv(n, block))
+    return pl.pallas_call(
+        functools.partial(_multi_merge_kernel, k=k, n=n, block=block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, n), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.int32),
+        interpret=interpret,
+    )(arrs)
+
+
+# ---------------------------------------------------------------------- #
 # offset-keyed co-iteration primitives (vector backend entry points)
 # ---------------------------------------------------------------------- #
 def _fits_i32(a: np.ndarray) -> bool:
@@ -195,6 +257,77 @@ def union_keys(a: np.ndarray, b: np.ndarray
     hit_b = (pos_b < len(b)) & (b[safe_b] == u)
     return (u, np.where(hit_a, safe_a, -1).astype(np.int64),
             np.where(hit_b, safe_b, -1).astype(np.int64))
+
+
+def union_k_keys(arrays) -> Tuple[np.ndarray, list]:
+    """Sorted union of k sorted int64 key arrays (keys unique per
+    array).  Returns (union, [pos_i]): for every union element its
+    position in array i, or -1 where absent.
+
+    k == 2 delegates to ``union_keys``; larger fan-ins run the k-ary
+    multi-merge Pallas kernel on TPU and a concatenate-and-unique
+    ``searchsorted`` lowering on CPU."""
+    arrays = [np.asarray(a, dtype=np.int64) for a in arrays]
+    if len(arrays) == 1:
+        a = arrays[0]
+        return a.copy(), [np.arange(len(a), dtype=np.int64)]
+    if len(arrays) == 2:
+        u, pa, pb = union_keys(arrays[0], arrays[1])
+        return u, [pa, pb]
+    nonempty = [a for a in arrays if len(a)]
+    if not nonempty:
+        z = np.zeros(0, dtype=np.int64)
+        return z, [z.copy() for _ in arrays]
+    if _on_tpu() and all(_fits_i32(a) for a in nonempty):
+        n_pad = max(len(pad_sorted(a.astype(np.int32), 256))
+                    for a in nonempty)
+        stacked = np.stack([
+            np.concatenate([a.astype(np.int32),
+                            np.full(n_pad - len(a), _I32_MAX, np.int32)])
+            for a in arrays])
+        ranks = np.asarray(multi_merge_ranks(jnp.asarray(stacked)))
+        total = sum(len(a) for a in arrays)
+        merged = np.empty(total, dtype=np.int64)
+        for i, a in enumerate(arrays):
+            merged[ranks[i, :len(a)]] = a
+        keep = np.ones(total, dtype=bool)
+        keep[1:] = merged[1:] != merged[:-1]
+        u = merged[keep]
+    else:
+        u = np.unique(np.concatenate(nonempty))
+    out = []
+    for a in arrays:
+        if len(a) == 0:
+            out.append(np.full(len(u), -1, dtype=np.int64))
+            continue
+        pos = np.searchsorted(a, u)
+        safe = np.minimum(pos, len(a) - 1)
+        hit = (pos < len(a)) & (a[safe] == u)
+        out.append(np.where(hit, safe, -1).astype(np.int64))
+    return u, out
+
+
+def lookup_keys(hay: np.ndarray, probes: np.ndarray) -> np.ndarray:
+    """Gather path for ``Lookup`` IR ops: positions in ``hay`` (sorted
+    int64, unique) of every ``probes`` element (arbitrary order,
+    duplicates fine), -1 where absent.
+
+    TPU: probes are sorted, pushed through the skip-ahead intersection
+    kernel, and unsorted; CPU: one vectorized ``searchsorted``."""
+    hay = np.asarray(hay, dtype=np.int64)
+    probes = np.asarray(probes, dtype=np.int64)
+    if len(probes) == 0 or len(hay) == 0:
+        return np.full(len(probes), -1, dtype=np.int64)
+    if _on_tpu() and _fits_i32(hay) and int(probes.max()) < _I32_MAX:
+        order = np.argsort(probes, kind="stable")
+        idx_sorted = intersect_keys(probes[order], hay)
+        idx = np.empty(len(probes), dtype=np.int64)
+        idx[order] = idx_sorted
+        return idx
+    pos = np.searchsorted(hay, probes)
+    safe = np.minimum(pos, len(hay) - 1)
+    hit = (pos < len(hay)) & (hay[safe] == probes)
+    return np.where(hit, safe, -1)
 
 
 # ---------------------------------------------------------------------- #

@@ -58,8 +58,9 @@ ACCELS = [
 def test_accelerator_backend_equivalence(name, mod, params, rng, spmat):
     M = K = N = 32
     a, b = spmat(rng, M, K, 0.2), spmat(rng, K, N, 0.2)
-    assert_equivalent(mod.spec(), {"A": a, "B": b},
-                      {"m": M, "k": K, "n": N}, params)
+    path = assert_equivalent(mod.spec(), {"A": a, "B": b},
+                             {"m": M, "k": K, "n": N}, params)
+    assert path == "vector", f"{name} left the vector path"
 
 
 # ---------------------------------------------------------------------- #
@@ -79,6 +80,15 @@ def _zoo_inputs(name, rng):
     if name == "fft-step":
         return ({"P": rng.random((1, 4, 2, 2)), "X": rng.random((2, 2))},
                 {"u": 1, "k0": 4, "n1": 2, "v": 2})
+    if name in ("elementwise-3way", "sparse-add-3way"):
+        return ({"A": rng.random((20, 20)) * (rng.random((20, 20)) < 0.3),
+                 "B": rng.random((20, 20)) * (rng.random((20, 20)) < 0.4),
+                 "C": rng.random((20, 20)) * (rng.random((20, 20)) < 0.3)},
+                {"m": 20, "n": 20})
+    if name == "broadcast-outer":
+        return ({"A": rng.random(20) * (rng.random(20) < 0.5),
+                 "B": rng.random(20) * (rng.random(20) < 0.5)},
+                {"m": 20, "n": 7})
     return ({"A": rng.random((20, 20)) * (rng.random((20, 20)) < 0.25),
              "B": rng.random((20, 20)) * (rng.random((20, 20)) < 0.25)},
             {"m": 20, "k": 20, "n": 20})
@@ -90,22 +100,51 @@ def test_zoo_backend_equivalence(name):
     assert_equivalent(ZOO[name](), inputs, shapes)
 
 
-def test_zoo_vector_native_paths():
+#: zoo cascades that must run fully native on the vector path -- the
+#: feature coverage of the VectorPlan IR: plain two-driver SpMSpM,
+#: two- and three-way unions, >2-driver intersections, driverless
+#: dense ranks
+NATIVE_ZOO = ("rowwise-spmspm", "sparse-add", "tensaurus-mttkrp",
+              "factorized-mttkrp", "elementwise-3way", "sparse-add-3way",
+              "broadcast-outer")
+
+
+@pytest.mark.parametrize("name", NATIVE_ZOO)
+def test_zoo_vector_native_paths(name):
     """The cascades the columnar engine is built for must actually run
     vectorized, not through the fallback."""
-    for name in ("rowwise-spmspm", "sparse-add", "tensaurus-mttkrp"):
-        inputs, shapes = _zoo_inputs(name, np.random.default_rng(3))
-        path = assert_equivalent(ZOO[name](), inputs, shapes)
-        assert path == "vector", name
+    inputs, shapes = _zoo_inputs(name, np.random.default_rng(3))
+    sim = CascadeSimulator(ZOO[name](), model=False, backend="vector")
+    res = sim.run(dict(inputs), shapes)
+    assert res.fallback_reasons == {}, name
+    assert_equivalent(ZOO[name](), inputs, shapes)
 
 
-def test_partitioned_specs_fall_back():
+def test_partitioned_specs_run_native():
+    """Partitioned (Gamma-style occupancy) plans now lower to the
+    VectorPlan IR instead of falling back to the interpreter."""
     rng = np.random.default_rng(5)
     a = rng.random((24, 24)) * (rng.random((24, 24)) < 0.2)
     b = rng.random((24, 24)) * (rng.random((24, 24)) < 0.2)
     path = assert_equivalent(gamma.spec(), {"A": a, "B": b},
                              {"m": 24, "k": 24, "n": 24})
-    assert path == "fallback"
+    assert path == "vector"
+
+
+def test_accelerator_cascades_run_native(rng, spmat):
+    """Full-zoo coverage (the point of the vector-plan pipeline): the
+    SIGMA, OuterSPACE and MatRaptor cascades -- flattened ranks,
+    catch-up lookups, leaf-bound output ranks, take() filters,
+    leader-follower probing -- plus Gamma and ExTensor all execute on
+    the vector path with no recorded fallbacks."""
+    a, b = spmat(rng, 24, 24, 0.2), spmat(rng, 24, 24, 0.2)
+    shapes = {"m": 24, "k": 24, "n": 24}
+    for name, mod, params in ACCELS:
+        sim = CascadeSimulator(mod.spec(), params=params, model=False,
+                               backend="vector")
+        res = sim.run({"A": a, "B": b}, shapes)
+        assert res.fallback_reasons == {}, \
+            f"{name}: {res.fallback_reasons}"
 
 
 def test_fallback_reasons_surfaced(rng, spmat):
@@ -122,11 +161,13 @@ def test_fallback_reasons_surfaced(rng, spmat):
     assert res.fallback_reasons == {}
     assert res.report.fallback_reasons == {}
 
-    # Gamma's partitioned plans leave the vector path: both Einsums
-    # surface a reason, mirrored onto the Report.
-    sim = CascadeSimulator(gamma.spec(), backend="vector")
-    res = sim.run({"A": a, "B": b}, shapes)
-    assert set(res.fallback_reasons) == {"T", "Z"}
+    # affine (conv) expansion stays outside the IR: the Toeplitz
+    # cascade surfaces a reason for the affine Einsum, mirrored onto
+    # the Report, while the downstream matmul runs native.
+    inputs, shp = _zoo_inputs("toeplitz-conv", np.random.default_rng(7))
+    sim = CascadeSimulator(ZOO["toeplitz-conv"](), backend="vector")
+    res = sim.run(dict(inputs), shp)
+    assert set(res.fallback_reasons) == {"T"}
     assert all(res.fallback_reasons.values())
     assert res.report.fallback_reasons == res.fallback_reasons
 
@@ -174,6 +215,56 @@ def test_vector_backend_report_sane(rng, spmat):
     assert res.report is not None
     nnz = int(np.count_nonzero(a)) + int(np.count_nonzero(b))
     assert res.report.dram_bytes >= nnz * 4
+
+
+def test_mapped_workloads_equivalent_and_native(rng, spmat):
+    """The throughput benchmark's flattened (SIGMA-style) and
+    partitioned (OuterSPACE-style) SpMSpM mappings: bit-exact + count
+    parity vs the oracle, with no fallback."""
+    from benchmarks.backend_throughput import (flattened_spmspm,
+                                               partitioned_spmspm)
+    a, b = spmat(rng, 40, 40, 0.2), spmat(rng, 40, 40, 0.2)
+    shapes = {"m": 40, "k": 40, "n": 40}
+    for factory, inputs in (
+            (flattened_spmspm, {"A": a.T.copy(), "B": b}),
+            (partitioned_spmspm, {"A": a, "B": b})):
+        spec = factory(k_tile=8, stationary=32) \
+            if factory is flattened_spmspm else factory(rows=8, k_tile=16)
+        path = assert_equivalent(spec, inputs, shapes)
+        assert path == "vector", spec.name
+        sim = CascadeSimulator(spec, model=False, backend="vector")
+        res = sim.run(dict(inputs), shapes)
+        assert res.fallback_reasons == {}, spec.name
+
+
+def test_execute_csf_pre_pass_transforms(rng, spmat):
+    """execute_csf on *raw* (storage-form) CSFs: the Section-3.2
+    transform pre-pass (flatten / partition / swizzle on arrays) must
+    produce the same product as the dense reference."""
+    from benchmarks.backend_throughput import (flattened_spmspm,
+                                               partitioned_spmspm)
+    from repro.core.csf import CSF
+    from repro.core.generator import restore_declared
+    from repro.core.mapping import MappingResolver
+
+    a, b = spmat(rng, 36, 36, 0.25), spmat(rng, 36, 36, 0.25)
+    want = a @ b
+    for spec, a_ranks, a_mat in (
+            (flattened_spmspm(k_tile=8, stationary=32), ["K", "M"],
+             a.T.copy()),
+            (partitioned_spmspm(rows=8, k_tile=16), ["M", "K"], a)):
+        plan = MappingResolver(spec).plan("Z")
+        vb = VectorBackend()
+        out_csf, stats = vb.execute_csf(
+            plan, {"A": CSF.from_dense("A", a_ranks, a_mat),
+                   "B": CSF.from_dense("B", ["K", "N"], b)})
+        ft = restore_declared(out_csf.to_ftensor(), plan, ["M", "N"],
+                              {"M": 36, "N": 36})
+        got = np.zeros_like(want)
+        for path, val in ft.iter_leaves():
+            got[path] = val
+        assert np.allclose(got, want), spec.name
+        assert stats["muls"] > 0
 
 
 def test_execute_csf_skips_materialization(rng, spmat):

@@ -104,6 +104,21 @@ def _zoo_inputs(name, rng):
             "B": rng.random((20, 20)) * (rng.random((20, 20)) < 0.25),
         }
         return inputs, shapes
+    if name in ("elementwise-3way", "sparse-add-3way"):
+        shapes = {"m": 20, "n": 20}
+        inputs = {
+            "A": rng.random((20, 20)) * (rng.random((20, 20)) < 0.3),
+            "B": rng.random((20, 20)) * (rng.random((20, 20)) < 0.4),
+            "C": rng.random((20, 20)) * (rng.random((20, 20)) < 0.3),
+        }
+        return inputs, shapes
+    if name == "broadcast-outer":
+        shapes = {"m": 20, "n": 6}
+        inputs = {
+            "A": rng.random(20) * (rng.random(20) < 0.5),
+            "B": rng.random(20) * (rng.random(20) < 0.5),
+        }
+        return inputs, shapes
     raise KeyError(name)
 
 

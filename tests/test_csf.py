@@ -149,3 +149,47 @@ def test_property_csf_transforms_match(seed, m, k, size, which):
     else:
         f, c = ft.flatten_ranks("M", "K"), cs.flatten_ranks("M", "K")
     assert_same_tree(f, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 7),
+       k=st.integers(2, 7), n=st.integers(2, 7),
+       size=st.integers(1, 5), density=st.floats(0.1, 0.8),
+       chain=st.sampled_from(["flatten-occ", "shape-swizzle",
+                              "occ-flatten", "shape-occ", "flatten-deep"]))
+def test_property_csf_transform_chains_roundtrip(seed, m, k, n, size,
+                                                 density, chain):
+    """Composed Section-3.2 transforms on random 3-rank sparse tensors:
+    the vectorized CSF pipeline stays tree-exact against the fibertree
+    oracle, and every intermediate converts back losslessly (the
+    transform-pre-pass contract of the vector backend)."""
+    a = rand_dense(seed, (m, k, n), density=density)
+    ft = FTensor.from_dense("T", ["M", "K", "N"], a)
+    cs = CSF.from_ftensor(ft)
+    if chain == "flatten-occ":
+        f = ft.flatten_ranks("M", "K").partition_uniform_occupancy(
+            "MK", size)
+        c = cs.flatten_ranks("M", "K").partition_uniform_occupancy(
+            "MK", size)
+    elif chain == "shape-swizzle":
+        f = ft.partition_uniform_shape("K", size).swizzle(
+            ["K1", "M", "K0", "N"])
+        c = cs.partition_uniform_shape("K", size).swizzle(
+            ["K1", "M", "K0", "N"])
+    elif chain == "occ-flatten":
+        f = ft.partition_uniform_occupancy("N", size).flatten_ranks(
+            "N1", "N0")
+        c = cs.partition_uniform_occupancy("N", size).flatten_ranks(
+            "N1", "N0")
+    elif chain == "shape-occ":
+        f = ft.partition_uniform_shape("M", size) \
+            .partition_uniform_occupancy("M0", max(size - 1, 1))
+        c = cs.partition_uniform_shape("M", size) \
+            .partition_uniform_occupancy("M0", max(size - 1, 1))
+    else:                        # flatten the two innermost ranks
+        f = ft.swizzle(["M", "K", "N"]).flatten_ranks("K", "N")
+        c = cs.swizzle(["M", "K", "N"]).flatten_ranks("K", "N")
+    assert_same_tree(f, c)
+    # round-trip: CSF -> FTensor -> CSF is the identity on the tree
+    back = CSF.from_ftensor(c.to_ftensor())
+    assert_same_tree(c.to_ftensor(), back)
