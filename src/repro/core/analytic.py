@@ -20,18 +20,24 @@ Modes (see DESIGN.md for the exactness contract):
 
 Cascade intermediates are never materialized: their predicted output
 stats are kept on the backend and re-projected (mean field) into the
-consuming Einsum's execution order.  Plans outside the supported class
-(affine indices, flattened ranks, non-arithmetic semirings, ...) fall
-back to ``PythonBackend`` per Einsum, recording the reason in
-``last_fallback_reason``.
+consuming Einsum's execution order.  Semirings with vectorized forms
+(arith, min-plus, or-and) and affine / constant index maps are modeled
+natively: affine lookups apply the halo / boundary-occupancy hit
+fraction from ``density.affine_hit_fraction``, and the output-collision
+model is shared across semirings because the interpreter folds every
+collision sequentially (idempotence licenses the vectorized reduceat
+execution but does not change the count contract).  Plans outside the
+supported class (flattened ranks, update-in-place outputs,
+interpreter-only semirings, ...) fall back to ``PythonBackend`` per
+Einsum, recording the reason in ``last_fallback_reason``.
 """
 from __future__ import annotations
 
 from collections import Counter
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .density import (TensorDensity, expected_distinct, occupancy_overlap,
-                      union_size)
+from .density import (TensorDensity, affine_hit_fraction, expected_distinct,
+                      occupancy_overlap, union_size)
 from .einsum import BinOp, Literal, Semiring, Take, TensorAccess
 from .fibertree import FTensor
 from .iteration import EinsumExecutor, ExecutorBackend, PythonBackend
@@ -218,10 +224,9 @@ class AnalyticBackend(ExecutorBackend):
         if any(ri.flattened for ri in plan.loop_order):
             raise _Unsupported("flattened loop ranks")
         kind, accs = _classify_expr(einsum.expr)
-        for a in accs:
-            for ix in a.indices:
-                if _index_kind(ix) == "affine":
-                    raise _Unsupported(f"affine access {a}")
+        # affine / constant index maps are supported: they lower onto
+        # catch-up lookups (see _lookup_schedule) with a halo-occupancy
+        # hit fraction, mirroring the vector pipeline's Lookup.index
         order = [a.tensor for a in accs]
         levels: List[Tuple[str, List[Tuple[str, int]]]] = []
         for li, ri in enumerate(plan.loop_order):
@@ -309,8 +314,9 @@ class AnalyticBackend(ExecutorBackend):
                       out_initial, isect_strategy, isect_leader) -> FTensor:
         if out_initial is not None:
             raise _Unsupported("update-in-place output")
-        if semiring.name != "arith":
-            raise _Unsupported(f"semiring {semiring.name}")
+        if not semiring.has_vector_forms:
+            raise _Unsupported(
+                f"semiring {semiring.name} has no vectorized forms")
         try:
             ex = self._executor(plan, {t: v for t, v in tensors.items()
                                        if isinstance(v, FTensor)})
@@ -353,7 +359,7 @@ class AnalyticBackend(ExecutorBackend):
         # depth-(-1) lookups: constant indices resolvable before the loop
         points = self._apply_lookups(lookups.get(-1, []), points, present,
                                      stats, leaf_depth, essential, counts,
-                                     uniq, plan)
+                                     uniq, plan, shapes)
 
         for li, (rank, drv) in enumerate(levels):
             ri = plan.loop_order[li]
@@ -395,7 +401,7 @@ class AnalyticBackend(ExecutorBackend):
             if ri.binds:
                 points = self._apply_lookups(
                     lookups.get(li, []), points, present, stats,
-                    leaf_depth, essential, counts, uniq, plan)
+                    leaf_depth, essential, counts, uniq, plan, shapes)
             pts_after.append(points)
 
         # ---- leaf evaluation + output accumulation
@@ -440,17 +446,19 @@ class AnalyticBackend(ExecutorBackend):
         return 0.0
 
     def _lookup_schedule(self, ex: EinsumExecutor, plan: EinsumPlan,
-                         accs) -> Dict[int, List[Tuple[str, int, str]]]:
-        """loop level -> [(tensor, depth, rank)] catch-up descents,
-        mirroring ``EinsumExecutor._catch_up`` timing: a non-driving
-        level descends at the first binding loop level where its index
-        vars are all bound (level -1 for constant indices)."""
+                         accs) -> Dict[int, List[Tuple[str, int, str, Any]]]:
+        """loop level -> [(tensor, depth, rank, affine_index)] catch-up
+        descents, mirroring ``EinsumExecutor._catch_up`` timing: a
+        non-driving level descends at the first binding loop level where
+        its index vars are all bound (level -1 for constant indices).
+        ``affine_index`` is the declared non-bare ``AffineIndex`` at
+        that level, or None for bare variable lookups."""
         var_bound_at: Dict[str, int] = {}
         for lj, rj in enumerate(plan.loop_order):
             if rj.binds:
                 for v in rj.vars:
                     var_bound_at[v] = lj
-        out: Dict[int, List[Tuple[str, int, str]]] = {}
+        out: Dict[int, List[Tuple[str, int, str, Any]]] = {}
         for acc in accs:
             t = acc.tensor
             tp = plan.tensors[t]
@@ -462,6 +470,8 @@ class AnalyticBackend(ExecutorBackend):
                     prev = max(prev, inv[d])
                     continue
                 idx = ex._level_index(acc, tp, d)
+                if idx is not None and idx.is_bare:
+                    idx = None
                 vars_ = (idx.vars if idx is not None
                          else ex._level_vars(acc, tp, d, rank))
                 lv = max((var_bound_at.get(v, len(plan.loop_order))
@@ -469,13 +479,13 @@ class AnalyticBackend(ExecutorBackend):
                 if lv >= len(plan.loop_order):
                     raise _Unsupported(f"{t}: unbound lookup level {rank}")
                 lv = max(lv, prev)
-                out.setdefault(lv, []).append((t, d, rank))
+                out.setdefault(lv, []).append((t, d, rank, idx))
                 prev = lv
         return out
 
     def _apply_lookups(self, items, points, present, stats, leaf_depth,
-                       essential, counts, uniq, plan) -> float:
-        for t, d, rank in items:
+                       essential, counts, uniq, plan, shapes) -> float:
+        for t, d, rank, idx in items:
             td = stats[t]
             counts[("touch", t, rank, "coord", "r")] += points * present[t]
             _bump(uniq, ("touch", t, rank, "coord", "r"),
@@ -485,6 +495,11 @@ class AnalyticBackend(ExecutorBackend):
             else:
                 dom = td.domain(d)
                 p_hit = min(td.occ(d) / dom, 1.0) if dom > 0 else 1.0
+                if idx is not None:
+                    # affine / constant probe: only the in-range part of
+                    # the probe span can hit (conv halo / boundary crop)
+                    p_hit *= affine_hit_fraction(idx.terms, idx.const,
+                                                 shapes, dom)
             if t in essential:
                 points *= p_hit
             else:

@@ -67,6 +67,43 @@ def union_size(occ_a: float, occ_b: float, domain: float) -> float:
     return occ_a + occ_b - occupancy_overlap(occ_a, occ_b, domain)
 
 
+def affine_span(terms: Sequence[Tuple[str, int]], const: float,
+                var_shapes: Dict[str, float]) -> Tuple[float, float]:
+    """[lo, hi] range of ``const + sum(coeff * v)`` when each var ``v``
+    sweeps [0, shape_v); the probe span of an affine index map."""
+    lo = hi = float(const)
+    for v, cf in terms:
+        s = max(float(var_shapes.get(v) or 1.0), 1.0)
+        ext = float(cf) * (s - 1.0)
+        if ext >= 0:
+            hi += ext
+        else:
+            lo += ext
+    return lo, hi
+
+
+def affine_hit_fraction(terms: Sequence[Tuple[str, int]], const: float,
+                        var_shapes: Dict[str, float],
+                        domain: float) -> float:
+    """Expected fraction of affine probes that land inside the target
+    coordinate domain [0, domain) -- the halo / boundary-occupancy
+    correction for affine-shifted lookups (e.g. conv's ``h = p + r``
+    against an input of height H).
+
+    Model: the probe value is uniform over its span [lo, hi] (exact for
+    a single unit-coefficient term; a boundary-linear approximation for
+    multi-term sums).  Valid-padding conv (H = P + R - 1) gives exactly
+    1.0; shifted or cropped windows shed the out-of-range halo."""
+    lo, hi = affine_span(terms, const, var_shapes)
+    width = hi - lo + 1.0
+    if width <= 0:
+        return 0.0
+    if domain <= 0:
+        return 1.0                       # unknown domain: no correction
+    overlap = min(hi + 1.0, domain) - max(lo, 0.0)
+    return max(0.0, min(overlap / width, 1.0))
+
+
 def _log_nonempty_prob(inner: float, nnz: float, total: float) -> float:
     """log P(a block of ``inner`` positions holds >= 1 of ``nnz``
     nonzeros placed without replacement among ``total`` positions):

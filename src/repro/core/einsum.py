@@ -338,16 +338,45 @@ def _parse_factor(toks: _Tokens) -> Expr:
 # ---------------------------------------------------------------------- #
 @dataclass
 class Semiring:
-    """Redefinable (+, *) pair (TeAAL Sec. 8: e.g. SSSP uses (min, +))."""
+    """Redefinable (+, *) pair (TeAAL Sec. 8: e.g. SSSP uses (min, +)).
+
+    The scalar callables (`add`/`mul`/`sub`) drive the fibertree
+    interpreter; the vectorized forms (`add_vec`/`mul_vec`/`sub_vec`)
+    drive the columnar `VectorBackend`.  A semiring without vectorized
+    forms (``add_vec is None``) is interpreter-only: the vector lowering
+    raises `_Unsupported` and the cascade falls back to the oracle.
+
+    `add_ufunc` is set only when ``ufunc.reduceat`` over a group is
+    bit-identical to a sequential left fold of `add` (true for `min`,
+    which is exact under any association; NOT true for float `np.add`,
+    whose reduce uses pairwise summation).  `annihilator` is the value
+    that means "empty payload" in the fibertree (0 for every semiring
+    here); `is_idempotent` marks ``add(x, x) == x`` reductions, which
+    the analytic backend's collision model exploits.
+    """
     add: Callable[[Any, Any], Any] = lambda a, b: a + b
     mul: Callable[[Any, Any], Any] = lambda a, b: a * b
     sub: Callable[[Any, Any], Any] = lambda a, b: a - b
     add_identity: Any = 0.0
     name: str = "arith"
+    add_vec: Optional[Callable[[Any, Any], Any]] = None
+    mul_vec: Optional[Callable[[Any, Any], Any]] = None
+    sub_vec: Optional[Callable[[Any, Any], Any]] = None
+    add_ufunc: Optional[Any] = None      # segmented-reduceat-safe ufunc
+    annihilator: float = 0.0
+    is_idempotent: bool = False
+
+    @property
+    def has_vector_forms(self) -> bool:
+        return (self.add_vec is not None and self.mul_vec is not None
+                and self.sub_vec is not None)
 
     @staticmethod
     def arithmetic() -> "Semiring":
-        return Semiring()
+        # add_ufunc stays None: np.add.reduce pairwise-sums floats, which
+        # is not bit-identical to the interpreter's sequential fold.
+        return Semiring(add_vec=np.add, mul_vec=np.multiply,
+                        sub_vec=np.subtract)
 
     @staticmethod
     def min_plus() -> "Semiring":
@@ -356,15 +385,29 @@ class Semiring:
         fibertree which callers must account for."""
         return Semiring(add=min, mul=lambda a, b: a + b,
                         sub=lambda a, b: a - b,
-                        add_identity=float("inf"), name="min_plus")
+                        add_identity=float("inf"), name="min_plus",
+                        add_vec=np.minimum, mul_vec=np.add,
+                        sub_vec=np.subtract, add_ufunc=np.minimum,
+                        is_idempotent=True)
 
     @staticmethod
     def or_and() -> "Semiring":
-        """BFS frontier expansion: reduce with OR, combine with AND."""
+        """BFS frontier expansion: reduce with OR, combine with AND.
+
+        No `add_ufunc`: a single-contribution group must keep its raw
+        payload (the interpreter never calls `add` for it), which any
+        boolean reduceat would collapse to 1.0."""
         return Semiring(add=lambda a, b: float(bool(a) or bool(b)),
                         mul=lambda a, b: float(bool(a) and bool(b)),
                         sub=lambda a, b: float(bool(a) and not bool(b)),
-                        add_identity=0.0, name="or_and")
+                        add_identity=0.0, name="or_and",
+                        add_vec=lambda a, b: np.where(
+                            (a != 0) | (b != 0), 1.0, 0.0),
+                        mul_vec=lambda a, b: (
+                            (a != 0) & (b != 0)).astype(np.float64),
+                        sub_vec=lambda a, b: (
+                            (a != 0) & (b == 0)).astype(np.float64),
+                        is_idempotent=True)
 
 
 def eval_expr_point(expr: Expr, bindings: Dict[str, int],

@@ -21,10 +21,14 @@ output construction:
                         bindings for leaf-bound output ranks)
 
 ``_Unsupported`` is raised **only here**, never mid-execution: if
-``lower`` returns, the vector path can run the plan.  What remains
-outside the IR -- affine / constant indices, non-arithmetic semirings,
-update-in-place outputs, bare copies, sums of non-atomic or
-rank-unaligned terms -- falls back to the interpreter per Einsum.
+``lower`` returns, the vector path can run the plan.  Affine and
+constant index maps lower onto ``Lookup`` (coordinate translation on
+the probe stream), any semiring with vectorized forms parameterizes
+``Reduce`` and leaf compute, and update-in-place outputs seed the
+reduction from the existing tensor's points.  What remains outside the
+IR -- bare copies, sums of non-atomic or rank-unaligned terms, affine
+*output* indices, interpreter-only semirings -- falls back to the
+interpreter per Einsum.
 
 ``prepare_csf_inputs`` is the pre-pass for the columnar entry point
 (``VectorBackend.execute_csf``): it applies the Einsum's Section-3.2
@@ -38,7 +42,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
-from .einsum import BinOp, Semiring, Take, TensorAccess
+from .einsum import AffineIndex, BinOp, Semiring, Take, TensorAccess
 from .iteration import EinsumExecutor
 from .mapping import EinsumPlan
 from .trace import NullInstr
@@ -86,7 +90,13 @@ class DenseEnumerate:
 @dataclass(frozen=True)
 class Lookup:
     """Catch-up descent of one non-driving tensor level, probed by the
-    coordinate computed from index-var bindings."""
+    coordinate computed from index-var bindings.
+
+    ``index`` carries the affine map (coordinate shift/scale) for
+    non-bare accesses -- the probe is ``const + sum(coeff * var_col)``
+    over captured frontier columns (im2col-style windowing for conv's
+    ``I[b, c, p+r, q+s]``).  ``index is None`` means a bare/derived
+    probe built by stacking the level's var columns."""
     tensor: str
     depth: int
     rank: str
@@ -94,6 +104,7 @@ class Lookup:
     partition_start: bool            # position-by-range (upper partition)
     leaf: bool
     essential: bool                  # miss kills the branch
+    index: Optional[AffineIndex] = None
 
 
 @dataclass
@@ -114,11 +125,18 @@ class LevelIR:
 class Reduce:
     """Output construction: per exec-order output rank, where its
     coordinates come from -- ("level", li) for loop-matched ranks,
-    ("vars", vars) for leaf-bound ranks recovered from bindings."""
+    ("vars", vars) for leaf-bound ranks recovered from bindings.
+
+    The segmented reduction over the fused-key sort folds contributions
+    with ``semiring.add`` (sequential order, bit-exact against the
+    interpreter); ``has_initial`` seeds the groups from the existing
+    output tensor's points (update-in-place)."""
     out_ranks: List[str]
     sources: List[Tuple]
     widths: List[int]
     upper_ranks: Set[str]
+    semiring: Semiring = field(default_factory=Semiring.arithmetic)
+    has_initial: bool = False
 
 
 @dataclass
@@ -134,6 +152,10 @@ class VectorPlan:
     #: columns (lookup probes + leaf-bound output coordinates):
     #: var -> (loop level, coordinate column at that level)
     capture_vars: Dict[str, Tuple[int, int]]
+    semiring: Semiring = field(default_factory=Semiring.arithmetic)
+    #: constant-index descents resolvable before the first loop level
+    #: (e.g. the FFT cascade's P[0, k0, ...] root coordinate)
+    pre_lookups: List[Lookup] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------- #
@@ -141,9 +163,8 @@ class VectorPlan:
 # ---------------------------------------------------------------------- #
 def _walk_expr(expr, accs: List[TensorAccess], has_sum: List[bool]) -> None:
     if isinstance(expr, TensorAccess):
-        for ix in expr.indices:
-            if not ix.is_bare:
-                raise _Unsupported(f"non-bare access {expr}")
+        # affine / constant indices lower onto Lookup probes; nothing to
+        # reject here (unschedulable maps raise during lookup placement)
         accs.append(expr)
         return
     if isinstance(expr, Take):
@@ -238,15 +259,16 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
           isect_leader: Optional[str] = None) -> VectorPlan:
     """EinsumPlan -> VectorPlan, or raise ``_Unsupported``."""
     semiring = semiring or Semiring.arithmetic()
-    if out_initial is not None:
-        raise _Unsupported("update-in-place output")
-    if semiring.name != "arith":
-        raise _Unsupported(f"semiring {semiring.name}")
+    if not semiring.has_vector_forms:
+        raise _Unsupported(
+            f"semiring {semiring.name} has no vectorized forms")
     einsum = plan.einsum
     if not einsum.output.indices:
         raise _Unsupported("bare copy")
-    if any(not ix.is_bare for ix in einsum.output.indices):
-        raise _Unsupported("non-bare output indices")
+    # constant output indices (E[0, k0]) ride the loop-rank name match
+    # exactly like the interpreter; true affine output maps do not
+    if any(ix.terms and not ix.is_bare for ix in einsum.output.indices):
+        raise _Unsupported("affine output indices")
 
     accs: List[TensorAccess] = []
     has_sum = [False]
@@ -307,7 +329,12 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
 
     # ---- catch-up lookups: schedule every non-driving tensor level at
     # the first binding loop level where its coordinate is computable
-    # and its parent level has been descended
+    # and its parent level has been descended.  Affine/constant access
+    # indices carry their map onto the Lookup (probe translation);
+    # constant-only levels whose parents are all pre-descended resolve
+    # before the loop entirely (pre_lookups).
+    acc_of = {a.tensor: a for a in accs}
+    pre_lookups: List[Lookup] = []
     for t in order:
         tp = plan.tensors[t]
         drive = ex.drive[t]
@@ -320,17 +347,23 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
                 depth_level[d] = lv
                 continue
             rank = tp.exec_order[d]
-            vars_ = ex._level_vars(None, tp, d, rank)
-            if not vars_:
-                raise _Unsupported(f"{t}: lookup level {rank} binds no vars")
-            need = max((var_bound_at.get(v, len(loop)) for v in vars_),
-                       default=0)
-            if need >= len(loop):
+            idx = ex._level_index(acc_of[t], tp, d)
+            if idx is not None and not idx.is_bare:
+                vars_ = idx.vars
+            else:
+                idx = None             # bare/derived level: stack var cols
+                vars_ = ex._level_vars(None, tp, d, rank)
+                if not vars_:
+                    raise _Unsupported(
+                        f"{t}: lookup level {rank} binds no vars")
+            if any(v not in var_bound_at for v in vars_):
                 raise _Unsupported(f"{t}: unbound lookup level {rank}")
+            need = max((var_bound_at[v] for v in vars_), default=-1)
             prior = depth_level.get(d - 1, -1) if d > 0 else -1
             lv = max(need, prior)
-            # catch-up runs only after binding levels
-            while lv < len(loop) and not loop[lv].binds:
+            # catch-up runs only after binding levels (lv == -1: all
+            # probe inputs constant, descend before the first level)
+            while 0 <= lv < len(loop) and not loop[lv].binds:
                 lv += 1
             if lv >= len(loop):
                 raise _Unsupported(f"{t}: no binding level for {rank}")
@@ -344,10 +377,17 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
             # plan's created_ranks map is authoritative (a *declared*
             # rank whose name happens to end in a digit is exact-match)
             part = plan.created_ranks.get(rank) == "upper"
-            levels[lv].lookups.append(Lookup(
+            if part and idx is not None:
+                raise _Unsupported(
+                    f"{t}: affine index on partition rank {rank}")
+            lk = Lookup(
                 tensor=t, depth=d, rank=rank, vars=tuple(vars_),
                 partition_start=part, leaf=(d == leaf_depth[t]),
-                essential=(t in ex._essential)))
+                essential=(t in ex._essential), index=idx)
+            if lv < 0:
+                pre_lookups.append(lk)
+            else:
+                levels[lv].lookups.append(lk)
 
     # every lookup var and leaf-bound output var must be capturable
     out_ranks = list(plan.tensors[plan.output].exec_order)
@@ -381,12 +421,20 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
     if missing:
         raise _Unsupported(f"uncapturable index vars {sorted(missing)}")
 
+    if out_initial is not None and list(out_initial.ranks) != out_ranks:
+        raise _Unsupported(
+            f"update-in-place output not in execution form "
+            f"({list(out_initial.ranks)} vs {out_ranks})")
+
     red = Reduce(out_ranks=out_ranks, sources=sources, widths=widths,
                  upper_ranks={r for r in out_ranks
-                              if plan.created_ranks.get(r) == "upper"})
+                              if plan.created_ranks.get(r) == "upper"},
+                 semiring=semiring,
+                 has_initial=out_initial is not None)
     return VectorPlan(name=plan.output, expr=einsum.expr, accs=accs,
                       levels=levels, reduce=red, essential=set(ex._essential),
-                      leaf_depth=leaf_depth, capture_vars=capture_vars)
+                      leaf_depth=leaf_depth, capture_vars=capture_vars,
+                      semiring=semiring, pre_lookups=pre_lookups)
 
 
 # ---------------------------------------------------------------------- #

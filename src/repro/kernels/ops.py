@@ -16,7 +16,7 @@ the vector backend exists to accelerate (DESIGN.md, "TPU adaptation").
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -328,6 +328,98 @@ def lookup_keys(hay: np.ndarray, probes: np.ndarray) -> np.ndarray:
     safe = np.minimum(pos, len(hay) - 1)
     hit = (pos < len(hay)) & (hay[safe] == probes)
     return np.where(hit, safe, -1)
+
+
+def lookup_keys_shifted(hay: np.ndarray, probes: np.ndarray,
+                        shift: int = 0) -> np.ndarray:
+    """Affine-shifted gather: positions in ``hay`` of ``probes + shift``,
+    -1 where absent.  Negative shifted probes are reported as misses
+    *before* dispatch -- a negative coordinate folded into an offset-key
+    pack would alias into the preceding fiber's key range.
+
+    The shift folds into the probe stream, so this rides the exact same
+    Pallas dispatch seam as ``lookup_keys`` (skip-ahead intersection on
+    TPU, one vectorized ``searchsorted`` on CPU)."""
+    probes = np.asarray(probes, dtype=np.int64)
+    shifted = probes + int(shift)
+    neg = shifted < 0
+    if neg.any():
+        idx = lookup_keys(hay, np.where(neg, 0, shifted))
+        return np.where(neg, -1, idx)
+    return lookup_keys(hay, shifted)
+
+
+def intersect_keys_shifted(a: np.ndarray, b: np.ndarray,
+                           shift: int = 0) -> np.ndarray:
+    """Positions in ``b`` of every element of ``a + shift`` (windowed
+    intersection: a constant shift keeps ``a`` sorted, so the shifted
+    stream reuses ``intersect_keys``'s skip-ahead kernel unchanged).
+    Negative shifted elements are misses (-1)."""
+    a = np.asarray(a, dtype=np.int64)
+    shifted = a + int(shift)
+    neg = shifted < 0
+    if neg.any():
+        idx = np.full(len(a), -1, dtype=np.int64)
+        idx[~neg] = intersect_keys(shifted[~neg], b)
+        return idx
+    return intersect_keys(shifted, b)
+
+
+def segmented_reduce(vals: np.ndarray, starts: np.ndarray,
+                     semiring=None,
+                     group_ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """Semiring-parameterized segmented reduction over a fused-key-sorted
+    value stream: ``starts[g]`` is the first index of group ``g``
+    (ascending, ``starts[0] == 0``); returns one reduced value per group.
+
+    Values fold strictly left-to-right within each group, bit-identical
+    to the interpreter's sequential ``semiring.add`` chain.  Three
+    lowerings, fastest admissible wins:
+
+    * float addition (``add_vec is np.add``, the arithmetic semiring)
+      -- one ``np.bincount`` pass: its weighted accumulation is a plain
+      C loop in input order, and seeding from 0.0 is exact for the
+      nonzero payloads the nz-filtered stream carries.  (NOT
+      ``np.add.reduceat``: reduceat pairwise-sums like ``reduce``,
+      verified non-bit-identical to the sequential fold.)
+    * a declared ``add_ufunc`` (min-plus: min is exact under any
+      association) -- one ``ufunc.reduceat``.
+    * otherwise -- a step-loop over ``add_vec`` bounded by the largest
+      group.
+
+    ``group_ids`` (optional, 0-based group index per element) lets a
+    caller that already materialized the group boundaries skip their
+    reconstruction on the bincount path.
+
+    CPU lowering today; slotted for the same Pallas dispatch seam as
+    ``multi_merge_ranks`` (segmented-scan kernel) once key domains are
+    packed int32."""
+    vals = np.asarray(vals)
+    starts = np.asarray(starts, dtype=np.int64)
+    n = len(vals)
+    if len(starts) == 0:
+        return vals[:0].copy()
+    if (semiring is None or semiring.add_vec is np.add) and \
+            vals.dtype == np.float64:
+        gids = group_ids
+        if gids is None:
+            gids = np.zeros(n, dtype=np.int64)
+            gids[starts[1:]] = 1
+            np.cumsum(gids, out=gids)
+        return np.bincount(gids, weights=vals, minlength=len(starts))
+    ufunc = None if semiring is None else semiring.add_ufunc
+    if ufunc is not None:
+        return ufunc.reduceat(vals, starts)
+    add_vec = np.add if semiring is None else semiring.add_vec
+    counts = np.diff(np.append(starts, n))
+    sums = vals[starts].copy()
+    step = 1
+    max_c = int(counts.max())
+    while step < max_c:
+        act = np.flatnonzero(counts > step)
+        sums[act] = add_vec(sums[act], vals[starts[act] + step])
+        step += 1
+    return sums
 
 
 # ---------------------------------------------------------------------- #

@@ -1,5 +1,15 @@
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# src-layout shim: make `python -m pytest` work without PYTHONPATH=src.
+# The repo root is needed too (benchmarks/ imports in several tests).
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 @pytest.fixture

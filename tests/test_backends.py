@@ -103,10 +103,11 @@ def test_zoo_backend_equivalence(name):
 #: zoo cascades that must run fully native on the vector path -- the
 #: feature coverage of the VectorPlan IR: plain two-driver SpMSpM,
 #: two- and three-way unions, >2-driver intersections, driverless
-#: dense ranks
+#: dense ranks, affine (conv im2col) and constant (FFT) index maps
 NATIVE_ZOO = ("rowwise-spmspm", "sparse-add", "tensaurus-mttkrp",
               "factorized-mttkrp", "elementwise-3way", "sparse-add-3way",
-              "broadcast-outer")
+              "broadcast-outer", "eyeriss-conv", "toeplitz-conv",
+              "fft-step")
 
 
 @pytest.mark.parametrize("name", NATIVE_ZOO)
@@ -151,6 +152,8 @@ def test_fallback_reasons_surfaced(rng, spmat):
     """The per-Einsum oracle fallback must not be silent: the run
     result (and Report) records why each Einsum left the fast path,
     and is empty when the whole cascade ran native."""
+    from repro.core.einsum import Semiring
+
     a, b = spmat(rng, 24, 24, 0.2), spmat(rng, 24, 24, 0.2)
     shapes = {"m": 24, "k": 24, "n": 24}
 
@@ -161,20 +164,69 @@ def test_fallback_reasons_surfaced(rng, spmat):
     assert res.fallback_reasons == {}
     assert res.report.fallback_reasons == {}
 
-    # affine (conv) expansion stays outside the IR: the Toeplitz
-    # cascade surfaces a reason for the affine Einsum, mirrored onto
-    # the Report, while the downstream matmul runs native.
-    inputs, shp = _zoo_inputs("toeplitz-conv", np.random.default_rng(7))
-    sim = CascadeSimulator(ZOO["toeplitz-conv"](), backend="vector")
-    res = sim.run(dict(inputs), shp)
-    assert set(res.fallback_reasons) == {"T"}
-    assert all(res.fallback_reasons.values())
+    # an interpreter-only semiring (no vectorized forms) stays outside
+    # the IR: every Einsum surfaces a reason, mirrored onto the Report,
+    # and the scalar oracle still produces the cascade output.
+    scalar_only = Semiring(add=min, mul=lambda x, y: x + y,
+                           add_identity=float("inf"), name="scalar_min")
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](), backend="vector",
+                           semiring=scalar_only)
+    res = sim.run({"A": a, "B": b}, shapes)
+    assert set(res.fallback_reasons) == {"Z"}
+    assert "scalar_min" in res.fallback_reasons["Z"]
     assert res.report.fallback_reasons == res.fallback_reasons
 
     # the oracle itself never "falls back"
     sim = CascadeSimulator(ZOO["rowwise-spmspm"](), backend="python")
     res = sim.run({"A": a, "B": b}, shapes)
     assert res.fallback_reasons == {}
+
+
+# ---------------------------------------------------------------------- #
+# graph accelerators (Sec. 8): min-plus + update-in-place on the IR
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("design", ["graphicionado", "graphdyns", "ours"])
+@pytest.mark.parametrize("algo", ["bfs", "sssp"])
+def test_graph_accelerators_native_and_equivalent(design, algo):
+    """The three vertex-centric designs run iterative BFS/SSSP under
+    the min-plus semiring fully on the vector path (no fallbacks --
+    including GraphDynS's partitioned bitmap and update-in-place P0),
+    bit-exact against the oracle with matching aggregate counts."""
+    from benchmarks.workloads import grid_graph
+    from repro.accelerators import graphicionado as G
+    from repro.core.einsum import Semiring
+
+    weighted = algo == "sssp"
+    adj = grid_graph(6, extra=6, weighted=weighted)
+    v = adj.shape[0]
+    spec = {
+        "graphicionado": lambda: G.graphicionado_spec(weighted=weighted),
+        "graphdyns": lambda: G.graphdyns_spec(weighted=weighted,
+                                              n_vertices=v),
+        "ours": lambda: G.improved_spec(weighted=weighted),
+    }[design]()
+    a0 = np.zeros(v)
+    a0[0] = 1.0
+    p0 = np.zeros(v)
+    p0[0] = 1.0
+    outs, cis = {}, {}
+    for bk in ("python", "vector"):
+        ci = CollectingInstr()
+        sim = CascadeSimulator(spec, semiring=Semiring.min_plus(),
+                               model=False, extra_instr=ci, backend=bk)
+        res, _ = sim.run_iterative(
+            {"G": adj.copy(), "A0": a0.copy(), "P0": p0.copy()},
+            carry={"A0": "A1", "P0": "P1"}, done_when_empty="A1",
+            max_iters=60, var_shapes={"d": v, "s": v})
+        if bk == "vector":
+            assert res.fallback_reasons == {}, res.fallback_reasons
+        outs[bk] = {n: res[n].to_dense() for n in res.tensors}
+        cis[bk] = ci
+    for n in outs["python"]:
+        assert np.array_equal(outs["python"][n], outs["vector"][n]), n
+    for attr in COUNTERS:
+        assert getattr(cis["python"], attr) == getattr(cis["vector"],
+                                                       attr), attr
 
 
 # ---------------------------------------------------------------------- #

@@ -1,0 +1,177 @@
+"""Semiring algebra properties and their preservation through the
+vectorized reduction pipeline: scalar/vector form agreement, identity
+and annihilator laws, idempotence, bit-exact segmented reduction, and
+the affine-shifted key kernels."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.einsum import Semiring
+from repro.kernels import ops
+
+SEMIRINGS = {
+    "arith": Semiring.arithmetic,
+    "min_plus": Semiring.min_plus,
+    "or_and": Semiring.or_and,
+}
+
+
+def _vals(rng, n):
+    # positive payloads: 0.0 is the universal "empty payload" value
+    return np.round(rng.random(n) * 8 + 0.5, 3)
+
+
+# ---------------------------------------------------------------------- #
+# algebraic laws
+# ---------------------------------------------------------------------- #
+@settings(max_examples=30)
+@given(name=st.sampled_from(sorted(SEMIRINGS)), seed=st.integers(0, 10**6))
+def test_scalar_vector_forms_agree(name, seed):
+    sr = SEMIRINGS[name]()
+    assert sr.has_vector_forms
+    rng = np.random.default_rng(seed)
+    a, b = _vals(rng, 16), _vals(rng, 16)
+    for scalar, vec in ((sr.add, sr.add_vec), (sr.mul, sr.mul_vec),
+                        (sr.sub, sr.sub_vec)):
+        want = np.array([scalar(x, y) for x, y in zip(a, b)])
+        assert np.array_equal(np.asarray(vec(a, b), dtype=float), want)
+
+
+@settings(max_examples=30)
+@given(name=st.sampled_from(sorted(SEMIRINGS)),
+       x=st.floats(min_value=0.25, max_value=9.0))
+def test_add_identity_and_idempotence(name, x):
+    sr = SEMIRINGS[name]()
+    if name == "or_and":
+        x = float(bool(x))           # boolean carrier
+    assert sr.add(x, sr.add_identity) == x
+    assert sr.add(sr.add_identity, x) == x
+    if sr.is_idempotent:
+        assert sr.add(x, x) == x
+
+
+@settings(max_examples=30)
+@given(name=st.sampled_from(sorted(SEMIRINGS)),
+       x=st.floats(min_value=0.25, max_value=9.0))
+def test_annihilator_matches_empty_payload(name, x):
+    """`annihilator` is the fibertree's empty-payload encoding: the
+    vector leaf compute masks absent operands to it instead of calling
+    `mul_vec`, so mul against it must never produce a spurious
+    nonzero on the or-and (boolean) carrier, and equals the masked
+    result by construction elsewhere."""
+    sr = SEMIRINGS[name]()
+    assert sr.annihilator == 0.0
+    if name != "min_plus":           # min-plus 'zero' is by-convention
+        assert sr.mul(x, sr.annihilator) == 0.0
+        assert sr.mul(sr.annihilator, x) == 0.0
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_add_ufunc_matches_sequential_fold(name):
+    """An `add_ufunc` may only be declared when `ufunc.reduceat` is
+    bit-identical to the interpreter's sequential left fold."""
+    sr = SEMIRINGS[name]()
+    if sr.add_ufunc is None:
+        return
+    rng = np.random.default_rng(0)
+    vals = _vals(rng, 64)
+    got = sr.add_ufunc.reduce(vals)
+    want = vals[0]
+    for v in vals[1:]:
+        want = sr.add(want, v)
+    assert got == want
+
+
+# ---------------------------------------------------------------------- #
+# segmented reduction (the Reduce kernel)
+# ---------------------------------------------------------------------- #
+@settings(max_examples=40)
+@given(name=st.sampled_from(sorted(SEMIRINGS)),
+       seed=st.integers(0, 10**6), n=st.integers(1, 80))
+def test_segmented_reduce_bit_exact(name, seed, n):
+    """kernels.ops.segmented_reduce == sequential scalar left fold per
+    group, bit-for-bit, for every semiring (ufunc fast path and
+    step-loop fallback)."""
+    sr = SEMIRINGS[name]()
+    rng = np.random.default_rng(seed)
+    vals = _vals(rng, n)
+    if name == "or_and":
+        vals = (vals > 4).astype(np.float64)
+    nseg = int(rng.integers(1, n + 1))
+    starts = np.unique(np.concatenate(
+        [[0], rng.integers(0, n, size=nseg - 1)])).astype(np.int64)
+    got = ops.segmented_reduce(vals, starts, sr)
+    bounds = np.append(starts, n)
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        want = vals[lo]
+        for v in vals[lo + 1:hi]:
+            want = sr.add(want, v)
+        assert got[i] == want, (name, i)
+
+
+def test_segmented_reduce_empty_and_default():
+    assert len(ops.segmented_reduce(np.array([]), np.array([],
+                                                          dtype=np.int64))) \
+        == 0
+    vals = np.array([1.0, 2.0, 3.0])
+    out = ops.segmented_reduce(vals, np.array([0, 2], dtype=np.int64))
+    assert np.array_equal(out, [3.0, 3.0])   # default arith fold
+
+
+# ---------------------------------------------------------------------- #
+# affine-shifted key kernels
+# ---------------------------------------------------------------------- #
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10**6), shift=st.integers(-6, 6))
+def test_lookup_keys_shifted(seed, shift):
+    rng = np.random.default_rng(seed)
+    hay = np.unique(rng.integers(0, 40, size=12)).astype(np.int64)
+    probes = rng.integers(0, 40, size=20).astype(np.int64)
+    got = ops.lookup_keys_shifted(hay, probes, shift=shift)
+    for p, g in zip(probes, got):
+        q = p + shift
+        if q < 0 or q not in hay:
+            assert g == -1
+        else:
+            assert hay[g] == q
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10**6), shift=st.integers(-6, 6))
+def test_intersect_keys_shifted(seed, shift):
+    rng = np.random.default_rng(seed)
+    a = np.unique(rng.integers(0, 40, size=12)).astype(np.int64)
+    b = np.unique(rng.integers(0, 40, size=12)).astype(np.int64)
+    got = ops.intersect_keys_shifted(a, b, shift=shift)
+    for x, g in zip(a, got):
+        q = x + shift
+        if q < 0 or q not in b:
+            assert g == -1
+        else:
+            assert b[g] == q
+
+
+# ---------------------------------------------------------------------- #
+# semiring laws through Reduce: end-to-end tropical / boolean matmul
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["min_plus", "or_and"])
+def test_semiring_through_reduce_backend_equivalence(name, rng, spmat):
+    """A full SpMSpM under min-plus (tropical) / or-and (reachability):
+    the vector path's semiring-parameterized Reduce must match the
+    interpreter's sequential scalar fold bit-for-bit."""
+    from repro.accelerators.zoo import ZOO
+    from repro.core.generator import CascadeSimulator
+
+    sr = SEMIRINGS[name]()
+    a, b = spmat(rng, 24, 24, 0.3), spmat(rng, 24, 24, 0.3)
+    if name == "or_and":
+        a, b = (a != 0).astype(float), (b != 0).astype(float)
+    shapes = {"m": 24, "k": 24, "n": 24}
+    outs = {}
+    for bk in ("python", "vector"):
+        sim = CascadeSimulator(ZOO["rowwise-spmspm"](), semiring=sr,
+                               model=False, backend=bk)
+        res = sim.run({"A": a.copy(), "B": b.copy()}, dict(shapes))
+        assert res.fallback_reasons == {}, bk
+        outs[bk] = res["Z"].to_dense()
+    assert np.array_equal(outs["python"], outs["vector"])
