@@ -294,24 +294,66 @@ def run(backend: str = "both", smoke: bool = False
     return rows
 
 
+def profile_stages(sizes: Optional[List[int]] = None) -> None:
+    """Per-stage wall-time breakdown of the vector path (materialize /
+    pair-merge / lookup / finalize / reduce / output-build) for each
+    workload, from ``VectorBackend.stage_times``."""
+    jobs: List[Tuple[str, object, List[str], int]] = []
+    plan = MappingResolver(rowwise_spmspm()).plan("Z")
+    for n in (sizes or [SIZES[-1]]):
+        jobs.append(("rowwise", plan, ["M", "K"], n))
+    for wname, (factory, a_ranks) in MAPPED_WORKLOADS.items():
+        mplan = MappingResolver(factory()).plan("Z")
+        for n in (sizes or [MAPPED_SIZES[-1]]):
+            jobs.append((wname, mplan, a_ranks, n))
+    for wname, plan_, a_ranks, n in jobs:
+        a = synth_csf(n, DENSITY, 1, "A", a_ranks)
+        b = synth_csf(n, DENSITY, 2, "B", ["K", "N"])
+        vb = VectorBackend(profile=True)
+        vb.execute_csf(plan_, {"A": a, "B": b})      # warm
+        _trim_allocator()
+        t0 = time.time()
+        _, stats = vb.execute_csf(plan_, {"A": a, "B": b})
+        wall = time.time() - t0
+        staged = sum(vb.stage_times.values())
+        print(f"{wname} n={n}: {wall:.3f}s wall, "
+              f"{stats['muls'] / max(wall, 1e-9) / 1e6:.2f} M muls/s")
+        for stage, dt in sorted(vb.stage_times.items(),
+                                key=lambda kv: -kv[1]):
+            print(f"  {stage:<14} {dt:7.3f}s  {dt / wall * 100:5.1f}%")
+        print(f"  {'(untracked)':<14} {wall - staged:7.3f}s  "
+              f"{(wall - staged) / wall * 100:5.1f}%")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--record", action="store_true",
-                    help=f"rewrite {BENCH_JSON.name}")
+                    help=f"rewrite {BENCH_JSON.name} (preserves the "
+                         f"kernel_rates section, see kernels_bench.py)")
     ap.add_argument("--backend", default="both",
                     choices=["python", "vector", "analytic", "both"])
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sizes", type=str, default=None,
                     help="comma-separated sizes override")
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-stage vector-path wall-time "
+                         "breakdown instead of recording rates")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes
              else (SMOKE_SIZES if args.smoke else SIZES))
+    if args.profile:
+        profile_stages(sizes if args.sizes or args.smoke else None)
+        return
     records = bench(sizes=sizes, backend=args.backend,
                     py_max_size=max(sizes) if args.smoke else PY_MAX_SIZE,
                     mapped_sizes=SMOKE_SIZES if args.smoke else None)
     summary = summarize(records)
     print(json.dumps(summary, indent=2))
     if args.record:
+        if BENCH_JSON.exists():
+            prev = json.loads(BENCH_JSON.read_text())
+            if "kernel_rates" in prev:
+                summary["kernel_rates"] = prev["kernel_rates"]
         BENCH_JSON.write_text(json.dumps(summary, indent=2) + "\n")
         print(f"wrote {BENCH_JSON}")
 

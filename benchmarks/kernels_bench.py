@@ -5,11 +5,19 @@ roofline table carries the performance story).
 ``backend`` additionally drives a small SpMSpM loop nest through the
 selected execution backend (python | vector), so the offset-keyed
 co-iteration primitives (intersect_keys / union_keys) are exercised on
-their real call path."""
+their real call path.
+
+``seam_rates`` measures the four dispatch seams of the kernel-backend
+registry (intersect / union-k / lookup / segmented-reduce) in keys per
+second per backend; ``--record`` merges them into BENCH_backend.json
+under ``kernel_rates``."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List, Tuple
+from pathlib import Path
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -17,6 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.kernels.backends import KERNEL_BACKENDS, resolve_kernel_backend
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_backend.json"
 
 
 def _t(fn, *args, reps=3) -> Tuple[float, object]:
@@ -112,3 +123,81 @@ def run(backend: str = "vector") -> List[Tuple[str, float, float]]:
     rows.append((f"kernels/spmspm_coiter/{backend}", dt * 1e6,
                  round(muls / max(dt, 1e-9), 1)))
     return rows
+
+
+# ---------------------------------------------------------------------- #
+# dispatch-seam microbenchmarks (kernel-backend registry)
+# ---------------------------------------------------------------------- #
+def _seam_inputs(n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    dom = 8 * n
+    a = np.sort(rng.choice(dom, size=n, replace=False)).astype(np.int64)
+    b = np.sort(rng.choice(dom, size=n, replace=False)).astype(np.int64)
+    c = np.sort(rng.choice(dom, size=n // 2, replace=False)).astype(
+        np.int64)
+    probes = rng.integers(0, dom, size=n).astype(np.int64)
+    vals = rng.random(n) + 0.1
+    gids = np.sort(rng.integers(0, max(n // 8, 1), size=n)).astype(
+        np.int64)
+    gids = np.cumsum(np.diff(gids, prepend=gids[0:1]) > 0).astype(np.int64)
+    starts = np.flatnonzero(np.diff(gids, prepend=-1) > 0)
+    return a, b, c, probes, vals, starts, gids
+
+
+def seam_rates(kernel_backend: str = "numpy", n: int = 1 << 20,
+               reps: int = 3) -> Dict[str, float]:
+    """Keys per second through each registry dispatch seam (best of
+    ``reps``), on sorted unique key arrays of ``n`` elements."""
+    from repro.core.einsum import Semiring
+
+    kb = resolve_kernel_backend(kernel_backend)
+    a, b, c, probes, vals, starts, gids = _seam_inputs(n)
+    sr = Semiring.arithmetic()
+    seams = {
+        "intersect": (lambda: kb.intersect_keys(a, b), n),
+        "union_k": (lambda: kb.union_k_keys([a, b, c]), n * 5 // 2),
+        "lookup": (lambda: kb.lookup_keys(a, probes), n),
+        "segmented_reduce": (
+            lambda: kb.segmented_reduce(vals, starts, sr, group_ids=gids),
+            n),
+    }
+    out: Dict[str, float] = {}
+    for name, (fn, keys) in seams.items():
+        fn()                                  # warm (jit compile etc.)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        out[name] = round(keys / best, 1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help=f"merge kernel_rates into {BENCH_JSON.name}")
+    ap.add_argument("--kernel-backends", default="numpy,jax-jit",
+                    help="comma-separated registry backends to measure")
+    ap.add_argument("--n", type=int, default=1 << 20)
+    args = ap.parse_args()
+    names = [s for s in args.kernel_backends.split(",") if s]
+    bad = [s for s in names if s not in KERNEL_BACKENDS]
+    if bad:
+        ap.error(f"unknown kernel backends {bad}; choose from "
+                 f"{KERNEL_BACKENDS}")
+    rates = {name: seam_rates(name, n=args.n) for name in names}
+    summary = {"metric": "keys per second", "n_keys": args.n,
+               "backends": rates}
+    print(json.dumps(summary, indent=2))
+    if args.record:
+        doc = {}
+        if BENCH_JSON.exists():
+            doc = json.loads(BENCH_JSON.read_text())
+        doc["kernel_rates"] = summary
+        BENCH_JSON.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,8 @@ SEG_DTYPE = np.int32
 
 def _as_coord_col(arr: Any) -> np.ndarray:
     a = np.asarray(arr)
+    if a.dtype == COORD_DTYPE:       # hot path: no copy, no domain scan
+        return a if a.ndim == 2 else a.reshape(-1, 1)
     if a.size:
         assert a.max() <= np.iinfo(COORD_DTYPE).max
     a = a.astype(COORD_DTYPE)
@@ -411,9 +413,14 @@ class CSF:
 def _from_sorted_points(name: str, ranks: Sequence[str],
                         cols: List[np.ndarray], values: np.ndarray,
                         rank_shapes: Optional[Dict[str, Any]],
-                        default: Any, upper_ranks: set) -> "CSF":
+                        default: Any, upper_ranks: set,
+                        leaf_unique: bool = False) -> "CSF":
     """Build a CSF from per-rank coordinate columns already sorted
-    lexicographically outer->inner (one row per leaf)."""
+    lexicographically outer->inner (one row per leaf).
+
+    ``leaf_unique`` promises every row is a distinct point (e.g. the
+    vector path's reduced groups): the innermost level then skips its
+    boundary scan entirely -- every row starts a leaf fiber entry."""
     L = len(ranks)
     n = len(values)
     cols = [_as_coord_col(c) for c in cols]
@@ -429,9 +436,21 @@ def _from_sorted_points(name: str, ranks: Sequence[str],
     prev_starts: Optional[np.ndarray] = None
     for d in range(L):
         c = cols[d]
+        if leaf_unique and d == L - 1 and d > 0:
+            # distinct rows: searchsorted(arange(n), x) == x, so the
+            # level's starts are all rows and segments come straight
+            # from the parent boundaries
+            coords.append(c)
+            assert prev_starts is not None
+            segments.append(np.append(prev_starts, n).astype(np.int64))
+            prev_starts = None
+            break
         changed = np.zeros(n, dtype=bool)
         changed[0] = True
-        changed[1:] = np.any(c[1:] != c[:-1], axis=1)
+        if c.shape[1] == 1:              # skip the reduce over one column
+            np.not_equal(c[1:, 0], c[:-1, 0], out=changed[1:])
+        else:
+            changed[1:] = np.any(c[1:] != c[:-1], axis=1)
         new_prefix = new_prefix | changed
         starts = np.flatnonzero(new_prefix)
         coords.append(c[starts])

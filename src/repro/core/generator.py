@@ -222,10 +222,48 @@ class CascadeSimulator:
     # ------------------------------------------------------------------ #
     def run(self, inputs: Dict[str, Any],
             var_shapes: Optional[Dict[str, int]] = None) -> SimResult:
+        from .einsum import TensorAccess as _TA
+
         store: Dict[str, FTensor] = {
             name: self._to_ftensor(name, v) for name, v in inputs.items()}
         shapes = self._var_shapes(store, var_shapes)
         fallbacks: Dict[str, str] = {}
+
+        # consecutive independent Einsums (no member reads or rewrites
+        # another member's output) batch into one execute_batch call;
+        # outputs land in the store at flush time.  Results, counts, and
+        # fallback recording are identical to the sequential loop: a
+        # batched member's inputs and shapes cannot be affected by the
+        # other members (shape maxima never grow from adding outputs,
+        # since output rank shapes derive from the same shapes dict).
+        pending: List[Dict[str, Any]] = []
+        pending_out: List[str] = []
+
+        def flush() -> None:
+            nonlocal shapes
+            if not pending:
+                return
+            outs = self.backend.execute_batch(list(pending))
+            paths = getattr(self.backend, "last_batch_paths", []) or []
+            reasons = getattr(self.backend, "last_batch_fallbacks", []) \
+                or []
+            for i, (o_name, out_exec) in enumerate(zip(pending_out, outs)):
+                if i < len(paths) and paths[i] == "fallback":
+                    fallbacks[o_name] = (reasons[i]
+                                         if i < len(reasons) else "") or ""
+                declared_order = (self.spec.mapping.rank_order.get(o_name)
+                                  or self.spec.einsum.declaration[o_name])
+                decl_shapes = {}
+                for r in declared_order:
+                    v = r.lower()
+                    if v in shapes:
+                        decl_shapes[r] = shapes[v]
+                store[o_name] = restore_declared(
+                    out_exec, self.plans[o_name], declared_order,
+                    decl_shapes)
+            pending.clear()
+            pending_out.clear()
+            shapes = self._var_shapes(store, var_shapes)
 
         for e in self.spec.einsum.expressions:
             out_name = e.output.tensor
@@ -233,14 +271,18 @@ class CascadeSimulator:
 
             # bare whole-tensor copy (e.g. "P1 = P0"): a rename, not data
             # movement -- alias with zero hardware cost.
-            from .einsum import TensorAccess as _TA
             if (not e.output.indices and isinstance(e.expr, _TA)
                     and not e.expr.indices):
+                flush()
                 store[out_name] = store[e.expr.tensor].copy(out_name)
                 notify = getattr(self.backend, "notify_copy", None)
                 if notify is not None:
                     notify(out_name, e.expr.tensor)
                 continue
+
+            if out_name in pending_out \
+                    or any(t in pending_out for t in e.input_names):
+                flush()
 
             missing = [t for t in e.input_names if t not in store]
             if missing:
@@ -284,24 +326,13 @@ class CascadeSimulator:
                 self.model.register_exec_tensors(out_name, exec_forms)
 
             strategy, leader = self._isect_config(out_name)
-            out_exec = self.backend.execute(
-                plan, exec_forms, shapes, semiring=self.semiring,
-                instr=self.instr, out_initial=out_initial,
-                isect_strategy=strategy, isect_leader=leader)
-            if getattr(self.backend, "last_path", None) == "fallback":
-                fallbacks[out_name] = getattr(
-                    self.backend, "last_fallback_reason", None) or ""
-
-            declared_order = (self.spec.mapping.rank_order.get(out_name)
-                              or self.spec.einsum.declaration[out_name])
-            decl_shapes = {}
-            for r in declared_order:
-                v = r.lower()
-                if v in shapes:
-                    decl_shapes[r] = shapes[v]
-            store[out_name] = restore_declared(out_exec, plan,
-                                               declared_order, decl_shapes)
-            shapes = self._var_shapes(store, var_shapes)
+            pending.append(dict(
+                plan=plan, tensors=exec_forms, var_shapes=shapes,
+                semiring=self.semiring, instr=self.instr,
+                out_initial=out_initial, isect_strategy=strategy,
+                isect_leader=leader))
+            pending_out.append(out_name)
+        flush()
 
         report = (evaluate(self.spec, self.plans, self.model)
                   if self.model is not None else None)

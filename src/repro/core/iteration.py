@@ -674,6 +674,25 @@ class ExecutorBackend:
                 isect_leader: Optional[str] = None) -> FTensor:
         raise NotImplementedError
 
+    def execute_batch(self, requests: "List[Dict]") -> "List[FTensor]":
+        """Execute a batch of *independent* Einsums (no request reads
+        another's output).  Each request is an ``execute`` kwargs dict;
+        results come back in request order with instrumentation and
+        per-request fallback state identical to sequential execution.
+
+        The default lowering is the sequential loop; backends override
+        to share work across the batch (``VectorBackend`` reuses its
+        kernel dispatch and workspace buffers and records the per-
+        request paths on ``last_batch_paths``)."""
+        outs, paths, reasons = [], [], []
+        for req in requests:
+            outs.append(self.execute(**req))
+            paths.append(getattr(self, "last_path", None))
+            reasons.append(getattr(self, "last_fallback_reason", None))
+        self.last_batch_paths = paths
+        self.last_batch_fallbacks = reasons
+        return outs
+
 
 class PythonBackend(ExecutorBackend):
     """The original object-interpreter path, kept as the oracle."""

@@ -36,6 +36,7 @@ semirings -- transparently fall back to ``PythonBackend``, so
 """
 from __future__ import annotations
 
+import time
 from collections import Counter
 from typing import Dict, List, Optional, Tuple
 
@@ -58,21 +59,56 @@ from .vplan import (DenseEnumerate, Drive, Intersect, LevelIR, Lookup,
 #: churn less
 DEFAULT_CHUNK_ITEMS = 512
 
+#: widest dense group-accumulator the fused leaf reduction will
+#: allocate (slots; float64 sums + int64 counts ~= 16 B/slot)
+DENSE_GROUP_CAP = 1 << 25
+
+_I32_N = 1 << 31
+
 
 # ---------------------------------------------------------------------- #
 # batched helpers
 # ---------------------------------------------------------------------- #
 def _expand(lo: np.ndarray, hi: np.ndarray
             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Flatten per-item [lo, hi) ranges: (item_of, elem, counts, offs)."""
+    """Flatten per-item [lo, hi) ranges: (item_of, elem, counts, offs).
+
+    ``item_of`` / ``elem`` come out int32 whenever they fit -- the
+    expansion dominates peak bandwidth on the hot path, and every
+    downstream consumer that multiplies them into packed int64 keys
+    upcasts explicitly (NumPy 2 no longer value-promotes)."""
     counts = (hi - lo).astype(np.int64)
     total = int(counts.sum())
-    item_of = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+    idt = np.int32 if total < _I32_N and len(counts) < _I32_N else np.int64
+    item_of = np.repeat(np.arange(len(counts), dtype=idt), counts)
     offs = np.zeros(len(counts) + 1, dtype=np.int64)
     np.cumsum(counts, out=offs[1:])
-    elem = np.repeat(lo - offs[:-1], counts)
-    elem += np.arange(total, dtype=np.int64)
+    elem = np.repeat((lo - offs[:-1]).astype(idt), counts)
+    elem += np.arange(total, dtype=idt)
     return item_of, elem, counts, offs
+
+
+class _Workspace:
+    """Persistent per-backend scratch: named flat buffers grown
+    geometrically and reused across chunks, levels, and Einsums of a
+    batch, so the widest allocations of the hot loop stop cycling
+    through the allocator."""
+
+    __slots__ = ("_bufs",)
+
+    def __init__(self):
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def buf(self, tag: str, n: int, dtype) -> np.ndarray:
+        b = self._bufs.get(tag)
+        if b is None or len(b) < n or b.dtype != np.dtype(dtype):
+            cap = max(n, 1024, 0 if b is None else 2 * len(b))
+            b = np.empty(cap, dtype=dtype)
+            self._bufs[tag] = b
+        return b[:n]
+
+    def clear(self) -> None:
+        self._bufs.clear()
 
 
 class _CapacityExceeded(Exception):
@@ -337,14 +373,28 @@ class VectorBackend(ExecutorBackend):
     name = "vector"
 
     def __init__(self, chunk_items: int = DEFAULT_CHUNK_ITEMS,
-                 fallback: bool = True):
+                 fallback: bool = True, kernel_backend=None,
+                 profile: bool = False):
         self.chunk_items = chunk_items
         self.fallback = fallback
         self._oracle = PythonBackend()
+        #: resolved kernel backend for the four seams: an instance, a
+        #: registry name ('numpy' / 'jax-jit' / 'pallas-interpret' /
+        #: 'pallas-tpu'), or None -> $REPRO_KERNEL_BACKEND / auto
+        from repro.kernels.backends import resolve_kernel_backend
+        self.kernels = resolve_kernel_backend(kernel_backend)
         #: 'vector' or 'fallback' for the most recent execute() call
         self.last_path: Optional[str] = None
         #: why the most recent execute() fell back (None on the fast path)
         self.last_fallback_reason: Optional[str] = None
+        #: per-execution path of each request in the last execute_batch
+        self.last_batch_paths: List[str] = []
+        self._ws = _Workspace()
+        #: when True, per-stage wall time accumulates in stage_times
+        #: ('materialize' / 'pair-merge' / 'lookup' / 'finalize' /
+        #: 'reduce' / 'output-build'), reset per execute()/execute_csf()
+        self.profile = profile
+        self.stage_times: Counter = Counter()
 
     # ------------------------------------------------------------------ #
     def execute(self, plan, tensors, var_shapes, semiring=None, instr=None,
@@ -352,6 +402,7 @@ class VectorBackend(ExecutorBackend):
                 isect_leader=None) -> FTensor:
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
+        self.stage_times = Counter()
         try:
             vp = lower(plan, var_shapes, semiring, out_initial,
                        isect_strategy, isect_leader)
@@ -381,6 +432,25 @@ class VectorBackend(ExecutorBackend):
                 out_initial=out_initial, isect_strategy=isect_strategy,
                 isect_leader=isect_leader)
 
+    def execute_batch(self, requests) -> List[FTensor]:
+        """Batched frontier execution across independent Einsums: the
+        requests share this backend's resolved kernel dispatch and the
+        persistent workspace, so scratch allocations amortize across
+        the whole batch instead of cycling per Einsum.  Per-request
+        outputs, counts, and fallback behavior are identical to the
+        sequential loop (the grouping seam in ``generator.run`` only
+        batches Einsums with no data dependencies between them)."""
+        outs: List[FTensor] = []
+        paths: List[str] = []
+        reasons: List[Optional[str]] = []
+        for req in requests:
+            outs.append(self.execute(**req))
+            paths.append(self.last_path or "vector")
+            reasons.append(self.last_fallback_reason)
+        self.last_batch_paths = paths
+        self.last_batch_fallbacks = reasons
+        return outs
+
     def execute_csf(self, plan, tensors, semiring=None, instr=None,
                     isect_strategy="two_finger",
                     var_shapes: Optional[Dict[str, int]] = None,
@@ -393,6 +463,7 @@ class VectorBackend(ExecutorBackend):
         throughput benchmark."""
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
+        self.stage_times = Counter()
         shapes = dict(var_shapes or {})
         for c in tensors.values():
             for r, s in getattr(c, "rank_shapes", {}).items():
@@ -443,18 +514,45 @@ class VectorBackend(ExecutorBackend):
         chunked = (vp.levels[0].out_depth is not None
                    and frontier.n > self.chunk_items and len(vp.levels) > 1
                    and init is None)
+        fuse = vp.leaf_fuse
+        nz_cache: Dict = {}
         paths_parts: List[List[np.ndarray]] = []
         vals_parts: List[np.ndarray] = []
+        n_levels = len(vp.levels)
         step = self.chunk_items if chunked else max(frontier.n, 1)
         for i0 in range(0, max(frontier.n, 1), step):
             part = frontier.slice(i0, min(i0 + step, frontier.n))
-            for li in range(1, len(vp.levels)):
+            inner = n_levels - 1 if fuse is not None else n_levels
+            for li in range(1, inner):
                 part = self._level(li, vp, csf, part, counts)
-            p, v = self._finalize(part, vp, csf, counts, init)
+            tf = time.perf_counter() if self.profile else 0.0
+            # other stage counters can also advance inside this window
+            # (reduce always; a declined fuse re-enters _level, charging
+            # materialize/pair-merge/lookup) -- net their deltas out so
+            # the per-stage breakdown stays non-overlapping
+            inner_keys = ("reduce", "materialize", "pair-merge", "lookup")
+            s0 = sum(float(self.stage_times[k]) for k in inner_keys) \
+                if self.profile else 0.0
+            pv = None
+            if fuse is not None:
+                # batched innermost level: one wide expand-multiply-
+                # accumulate pass over the whole chunk frontier; None
+                # means the dense group domain was inadmissible here
+                pv = self._finalize_fused(part, vp, csf, counts, nz_cache)
+            if pv is None:
+                if fuse is not None:
+                    part = self._level(n_levels - 1, vp, csf, part, counts)
+                pv = self._finalize(part, vp, csf, counts, init)
+            if self.profile:
+                s1 = sum(float(self.stage_times[k]) for k in inner_keys)
+                self.stage_times["finalize"] += \
+                    (time.perf_counter() - tf) - (s1 - s0)
+            p, v = pv
             if len(v):
                 paths_parts.append(p)
                 vals_parts.append(v)
 
+        tb = time.perf_counter() if self.profile else 0.0
         if vals_parts:
             cols = [np.concatenate([p[d] for p in paths_parts], axis=0)
                     for d in range(len(red.out_ranks))]
@@ -462,9 +560,14 @@ class VectorBackend(ExecutorBackend):
         else:
             cols = [np.zeros((0, w), dtype=np.int64) for w in red.widths]
             vals = np.zeros(0, dtype=np.float64)
+        # every reduced group is a distinct output point, so the CSF
+        # build can skip the leaf boundary scan (leaf_unique)
         out_csf = _from_sorted_points(
             name, red.out_ranks, cols, vals,
-            {r: None for r in red.out_ranks}, 0, set(red.upper_ranks))
+            {r: None for r in red.out_ranks}, 0, set(red.upper_ranks),
+            leaf_unique=True)
+        if self.profile:
+            self.stage_times["output-build"] += time.perf_counter() - tb
 
         self._emit(instr, name, counts)
         stats = {"leaf_points": int(counts.get(("leaf",), 0)),
@@ -531,7 +634,9 @@ class VectorBackend(ExecutorBackend):
                     packing.append(_pack_factors(
                         lvl.width, [r[4] for r in raw.values()], fr.n))
                 _, factors, item_mult = packing[0]
-                keys = st.item_of * item_mult
+                # item_of may be int32 (hot expansion): upcast before
+                # the mult, NumPy 2 no longer value-promotes
+                keys = st.item_of.astype(np.int64) * item_mult
                 for j in range(st.coord.shape[1]):
                     keys = keys + st.coord[:, j].astype(np.int64) \
                         * factors[j]
@@ -558,7 +663,7 @@ class VectorBackend(ExecutorBackend):
         return build(lvl.op)
 
     def _pair(self, left, right, op: Intersect, n_items: int, ensure_keys):
-        from repro.kernels import ops as kops
+        kops = self.kernels
         ls, rs = left.stream, right.stream
         lkeys, rkeys = ensure_keys(ls), ensure_keys(rs)
         lf = (op.strategy == "leader_follower"
@@ -572,7 +677,10 @@ class VectorBackend(ExecutorBackend):
                 # no explicit leader among the pair: lead with the
                 # smaller fiber (the dynamic choice real units make)
                 lead_is_left = ls.counts <= rs.counts
+        tk = time.perf_counter() if self.profile else 0.0
         idx = kops.intersect_keys(lkeys, rkeys)
+        if self.profile:
+            self.stage_times["pair-merge"] += time.perf_counter() - tk
         hit = idx >= 0
         sel = np.flatnonzero(hit)
         item_of = ls.item_of[sel]
@@ -598,9 +706,12 @@ class VectorBackend(ExecutorBackend):
         return _RtPair(left, right, st, sel, idx_sel, adv_l, adv_r)
 
     def _union(self, children, n_items: int, item_mult_of, ensure_keys):
-        from repro.kernels import ops as kops
+        kops = self.kernels
         streams = [c.stream for c in children]
+        tk = time.perf_counter() if self.profile else 0.0
         u, pos_list = kops.union_k_keys([ensure_keys(s) for s in streams])
+        if self.profile:
+            self.stage_times["pair-merge"] += time.perf_counter() - tk
         item_of = u // max(item_mult_of(), 1)
         cnts = np.bincount(item_of, minlength=n_items).astype(np.int64)
         offs = np.zeros(n_items + 1, dtype=np.int64)
@@ -625,6 +736,9 @@ class VectorBackend(ExecutorBackend):
     # ------------------------------------------------------------------ #
     def _level(self, li: int, vp: VectorPlan, csf, fr: _Frontier,
                counts: Counter) -> _Frontier:
+        tm = time.perf_counter() if self.profile else 0.0
+        s0 = (float(self.stage_times["pair-merge"])
+              + float(self.stage_times["lookup"])) if self.profile else 0.0
         lvl = vp.levels[li]
         rank = lvl.rank
         out_here = lvl.out_depth is not None
@@ -632,8 +746,9 @@ class VectorBackend(ExecutorBackend):
         if isinstance(lvl.op, DenseEnumerate):
             shape = lvl.op.shape
             n = fr.n * shape
-            item_of = np.repeat(np.arange(fr.n, dtype=np.int64), shape)
-            coord = np.tile(np.arange(shape, dtype=np.int64), fr.n)[:, None]
+            idt = np.int32 if n < _I32_N else np.int64
+            item_of = np.repeat(np.arange(fr.n, dtype=idt), shape)
+            coord = np.tile(np.arange(shape, dtype=idt), fr.n)[:, None]
             counts[("iterate", rank)] += n
             counts[("advance", rank)] += n
             nf = fr.take(item_of, coord if out_here else None)
@@ -672,6 +787,11 @@ class VectorBackend(ExecutorBackend):
                 dead |= self._lookup(lk, csf, nf, counts)
             if dead.any():
                 nf = nf.filter(~dead)
+        if self.profile:
+            s1 = float(self.stage_times["pair-merge"]) \
+                + float(self.stage_times["lookup"])
+            self.stage_times["materialize"] += \
+                (time.perf_counter() - tm) - (s1 - s0)
         return nf
 
     # ------------------------------------------------------------------ #
@@ -679,7 +799,7 @@ class VectorBackend(ExecutorBackend):
                 counts: Counter) -> np.ndarray:
         """Catch-up descent of one tensor level by bound coordinate.
         Returns the per-item dead mask (essential misses)."""
-        from repro.kernels import ops as kops
+        kops = self.kernels
         c = csf[lk.tensor]
         d = lk.depth
         n = fr.n
@@ -736,7 +856,10 @@ class VectorBackend(ExecutorBackend):
             pos = np.where(found, safe, -1)
             n_touch = int(found.sum())
         else:
+            tk = time.perf_counter() if self.profile else 0.0
             idx = kops.lookup_keys(hay, probe_keys)
+            if self.profile:
+                self.stage_times["lookup"] += time.perf_counter() - tk
             pos = np.where(pvalid, idx, -1)
             if neg is not None:
                 # the clamped stand-in probe may have matched; a negative
@@ -763,7 +886,7 @@ class VectorBackend(ExecutorBackend):
         """Leaf evaluation + segmented in-order reduction (Reduce),
         both parameterized by the plan's semiring; ``init`` carries the
         update-in-place output's existing (paths, values)."""
-        from repro.kernels import ops as kops
+        kops = self.kernels
         name = vp.name
         red = vp.reduce
         sr = vp.semiring
@@ -828,8 +951,9 @@ class VectorBackend(ExecutorBackend):
                 c = next(lvl_cols)
                 flat.extend(c[:, j] for j in range(c.shape[1]))
             else:
-                flat.extend(np.asarray(fr.var_cols[v], dtype=np.int64)
-                            for v in src[1])
+                # native dtype (often int32 from CSF coords) flows
+                # through to the output build's fast path
+                flat.extend(np.asarray(fr.var_cols[v]) for v in src[1])
         widths = red.widths
         nzmask = vals != 0
         if nzmask.all():
@@ -900,7 +1024,10 @@ class VectorBackend(ExecutorBackend):
         # interpreter's sequential semiring.add, bit for bit; arith
         # rides one bincount pass, min-plus ufunc.reduceat, see
         # kernels.ops.segmented_reduce)
+        tr = time.perf_counter() if self.profile else 0.0
         sums = kops.segmented_reduce(vals, starts, sr, group_ids=gids)
+        if self.profile:
+            self.stage_times["reduce"] += time.perf_counter() - tr
         head = order[starts]             # pre-sort row of each group head
         out_rank = red.out_ranks[-1]
         # accounting: the first contribution of a group inserts (w);
@@ -915,6 +1042,219 @@ class VectorBackend(ExecutorBackend):
             n_contrib - n_plain
         counts[("compute", "add")] += n_contrib - n_plain
         return assemble([c[head] for c in cols]), sums
+
+    # ------------------------------------------------------------------ #
+    def _finalize_fused(self, fr: _Frontier, vp: VectorPlan, csf,
+                        counts: Counter, cache: Dict
+                        ) -> Optional[Tuple[List[np.ndarray], np.ndarray]]:
+        """Batched innermost level: expand every frontier item's leaf
+        fiber of the driven factor, multiply by the co-factor's leaf
+        value, and reduce into a dense per-group accumulator in one
+        ``bincount`` pass -- replacing stream build + sort + segmented
+        fold for the dominant two-factor contraction shape
+        (``vplan.LeafFuse``).  Bit-exact with the generic path: groups
+        come out in the same lexicographic order, and the weighted
+        bincount accumulates contributions in input order, which is
+        exactly the order the stable sort presents them to the
+        sequential fold.  Returns None when the dense group domain is
+        inadmissible here (caller runs the generic innermost level)."""
+        red = vp.reduce
+        fz = vp.leaf_fuse
+        last = len(vp.levels) - 1
+        rank = vp.levels[last].rank
+        c = csf[fz.driven]
+        oc = csf[fz.other]
+        dd = vp.leaf_depth[fz.driven]
+        if fr.n == 0:
+            return ([np.zeros((0, w), dtype=np.int64) for w in red.widths],
+                    np.zeros(0, dtype=np.float64))
+        opos = fr.pos.get(fz.other)
+        dpos = fr.pos.get(fz.driven)
+        if (opos is None or (opos < 0).any()
+                or (dd > 0 and (dpos is None or (dpos < 0).any()))
+                or oc.values.dtype != np.float64
+                or c.values.dtype != np.float64):
+            return None
+        lo, hi = self._ranges(c, dd, dpos if dpos is not None
+                              else np.full(fr.n, -2, dtype=np.int64))
+        total = int((hi - lo).sum())
+        lc = c.coords[dd]
+        if total == 0 or len(lc) == 0:
+            return ([np.zeros((0, w), dtype=np.int64) for w in red.widths],
+                    np.zeros(0, dtype=np.float64))
+
+        # flat output columns in exec-rank order, tagged by where the
+        # value lives: 'p' sorted-prefix item column, 'i' other per-item
+        # column, 'e' leaf coordinate column (index into lc)
+        flat: List[Tuple[str, object]] = []
+        n_prefix_cols = 0
+        lvl_cols = iter(fr.out_cols)
+        for si, (src, wdt) in enumerate(zip(red.sources, red.widths)):
+            if src[0] == "level":
+                if src[1] == last:
+                    flat.extend(("e", j) for j in range(wdt))
+                else:
+                    cc = next(lvl_cols)
+                    kind = "p" if si < red.prefix_sources else "i"
+                    flat.extend((kind, cc[:, j])
+                                for j in range(cc.shape[1]))
+                    if kind == "p":
+                        n_prefix_cols += cc.shape[1]
+            else:
+                for v in src[1]:
+                    lv, colj = vp.capture_vars[v]
+                    if lv == last:
+                        flat.append(("e", colj))
+                    else:
+                        flat.append(("i", np.asarray(fr.var_cols[v])))
+
+        mults = []
+        for kind, x in flat:
+            if kind == "e":
+                mults.append(int(lc[:, x].max()) + 1)
+            else:
+                mults.append(int(x.max()) + 1)
+
+        # the frontier is lexicographically sorted by level coords, so
+        # the leading prefix columns group with one boundary scan
+        if n_prefix_cols:
+            b = np.zeros(fr.n, dtype=bool)
+            b[0] = True
+            for _, x in flat[:n_prefix_cols]:
+                b[1:] |= x[1:] != x[:-1]
+            head_items = np.flatnonzero(b)
+            gid = np.cumsum(b, dtype=np.int64) - 1
+            n_local = len(head_items)
+        else:
+            head_items = np.zeros(1, dtype=np.int64)
+            gid = np.zeros(fr.n, dtype=np.int64)
+            n_local = 1
+
+        rest = flat[n_prefix_cols:]
+        rest_factors = [0] * len(rest)
+        rm = 1
+        for j in range(len(rest) - 1, -1, -1):
+            rest_factors[j] = rm
+            rm *= mults[n_prefix_cols + j]
+        size = n_local * rm
+        # three admissibility gates: bounded footprint, bounded
+        # oversubscription (slots vs contributions), and a cache-sized
+        # per-prefix-group span -- the scatter sweeps forward through
+        # prefix groups, so rm bounds its working set; without the
+        # bound (e.g. the flattened mapping, whose frontier is ordered
+        # by position, not output coordinate) the dense accumulate
+        # loses to the generic sort
+        if size > DENSE_GROUP_CAP or size > max(8 * total, 1 << 16) \
+                or rm > (1 << 20):
+            return None
+
+        # ---- commit point: counts may be mutated from here on ----
+        counts[("iterate", rank)] += total
+        counts[("advance", rank)] += total
+        counts[("touch", fz.driven, rank, "coord", "r")] += total
+        counts[("touch", fz.driven, rank, "payload", "r")] += total
+        counts[("leaf",)] += total
+
+        # per-item slot base and per-leaf-element slot offset (both fit
+        # int32: size <= DENSE_GROUP_CAP)
+        ik = gid * rm
+        for (kind, x), f in zip(rest, rest_factors):
+            if kind != "e":
+                ik = ik + x.astype(np.int64) * f
+        item_key = ik.astype(np.int32)
+        ecols = [(x, f) for (kind, x), f in zip(rest, rest_factors)
+                 if kind == "e"]
+        ekey = ("ep", id(c)) + tuple(ecols)
+        epart = cache.get(ekey)
+        if epart is None and ecols:
+            ep = np.zeros(len(lc), dtype=np.int64)
+            for x, f in ecols:
+                ep += lc[:, x].astype(np.int64) * f
+            epart = ep.astype(np.int32)
+            cache[ekey] = epart
+
+        ws = self._ws
+        item_of, elem, _, _ = _expand(lo, hi)
+        key = ws.buf("fk1", total, np.int32)
+        np.take(item_key, item_of, out=key)
+        if epart is not None:
+            ek = ws.buf("fk2", total, np.int32)
+            np.take(epart, elem, out=ek)
+            key += ek
+        v_o = oc.values[opos]
+        vals = ws.buf("fv1", total, np.float64)
+        np.take(v_o, item_of, out=vals)
+        v2 = ws.buf("fv2", total, np.float64)
+        np.take(c.values, elem, out=v2)
+        np.multiply(vals, v2, out=vals)
+
+        # multiplies counted on operand nonzeros (the annihilator
+        # short-circuit), exactly like the generic leaf eval
+        nzd = cache.get(("nz", id(c)))
+        if nzd is None:
+            nzd = c.values != 0
+            cache[("nz", id(c))] = nzd
+        m1 = ws.buf("fm1", total, np.bool_)
+        np.take(v_o != 0, item_of, out=m1)
+        m2 = ws.buf("fm2", total, np.bool_)
+        np.take(nzd, elem, out=m2)
+        m1 &= m2
+        counts[("compute", "mul")] += int(np.count_nonzero(m1))
+
+        # dense accumulate: weighted bincount == sequential in-order
+        # fold, bit for bit (stable sort preserves input order within a
+        # group, and a 0.0-seeded sum of its nonzero contributions
+        # reproduces the fold exactly); group existence comes from the
+        # nonzero-contribution count, matching the generic nz filter
+        nzv = ws.buf("fm3", total, np.bool_)
+        np.not_equal(vals, 0.0, out=nzv)
+        all_nz = bool(nzv.all())
+        tr = time.perf_counter() if self.profile else 0.0
+        sums = np.bincount(key, weights=vals, minlength=size)
+        exists = np.zeros(size, dtype=bool)
+        exists[key if all_nz else key[nzv]] = True
+        if self.profile:
+            self.stage_times["reduce"] += time.perf_counter() - tr
+        idx = np.flatnonzero(exists)
+        n_groups = len(idx)
+        n_contrib = total if all_nz else int(np.count_nonzero(nzv))
+        out_rank = red.out_ranks[-1]
+        counts[("touch", vp.name, out_rank, "payload", "w")] += n_contrib
+        counts[("touch", vp.name, out_rank, "payload", "r")] += \
+            n_contrib - n_groups
+        counts[("compute", "add")] += n_contrib - n_groups
+        if n_groups == 0:
+            return ([np.zeros((0, w), dtype=np.int64) for w in red.widths],
+                    np.zeros(0, dtype=np.float64))
+        gvals = sums[idx]
+
+        # decode slot -> output columns (ascending slot order is the
+        # generic path's lexicographic group order)
+        g_head = idx // rm
+        rem = idx - g_head * rm
+        out_flat: List[np.ndarray] = []
+        ri = 0
+        for j, (kind, x) in enumerate(flat):
+            if j < n_prefix_cols:
+                heads = np.asarray(x)[head_items]
+                out_flat.append(heads[g_head])
+            else:
+                f = rest_factors[ri]
+                ri += 1
+                q = rem // f
+                rem = rem - q * f
+                out_flat.append(q.astype(np.int32))
+
+        out, j = [], 0
+        for w in red.widths:
+            if w == 1:
+                out.append(out_flat[j].reshape(-1, 1))
+            elif w:
+                out.append(np.stack(out_flat[j:j + w], axis=1))
+            else:
+                out.append(np.zeros((n_groups, 0), dtype=np.int64))
+            j += w
+        return out, gvals
 
     # ------------------------------------------------------------------ #
     def _emit(self, instr: Instrumentation, name: str,

@@ -42,6 +42,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from .einsum import AffineIndex, BinOp, Semiring, Take, TensorAccess
 from .iteration import EinsumExecutor
 from .mapping import EinsumPlan
@@ -137,6 +139,27 @@ class Reduce:
     upper_ranks: Set[str]
     semiring: Semiring = field(default_factory=Semiring.arithmetic)
     has_initial: bool = False
+    #: leading sources that are loop levels 0, 1, 2, ... in order (and
+    #: all above the innermost level).  The frontier is lexicographically
+    #: sorted by level coordinates, so these columns arrive
+    #: non-decreasing and batched execution can group them with one
+    #: boundary scan instead of a sort (``vectorized._finalize_fused``).
+    prefix_sources: int = 0
+
+
+@dataclass(frozen=True)
+class LeafFuse:
+    """Innermost-level fusion descriptor: the last loop level is a
+    single-tensor ``Drive`` of ``driven``'s leaf with no lookups, the
+    expression is a two-factor arithmetic product, and ``other``'s leaf
+    value is already positioned on the frontier.  Execution can then
+    batch the whole frontier x leaf-fiber expansion into one wide
+    gather-multiply-bincount pass (``vectorized._finalize_fused``)
+    instead of materializing the innermost frontier and sorting it --
+    runtime still falls back to the generic path when the dense group
+    domain is inadmissible for the chunk at hand."""
+    driven: str                      # tensor enumerated at the last level
+    other: str                       # the co-factor, at its leaf already
 
 
 @dataclass
@@ -156,6 +179,8 @@ class VectorPlan:
     #: constant-index descents resolvable before the first loop level
     #: (e.g. the FFT cascade's P[0, k0, ...] root coordinate)
     pre_lookups: List[Lookup] = field(default_factory=list)
+    #: set when the innermost level admits batched leaf fusion
+    leaf_fuse: Optional[LeafFuse] = None
 
 
 # ---------------------------------------------------------------------- #
@@ -426,15 +451,48 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
             f"update-in-place output not in execution form "
             f"({list(out_initial.ranks)} vs {out_ranks})")
 
+    # sorted-prefix run length: leading output sources that are loop
+    # levels 0, 1, 2, ... in order arrive lexicographically sorted on
+    # the frontier (levels above the innermost one only -- the
+    # innermost level's columns are per-element, not per-item)
+    last_li = len(levels) - 1
+    prefix_sources = 0
+    for src in sources:
+        if src[0] == "level" and src[1] == prefix_sources \
+                and src[1] < last_li:
+            prefix_sources += 1
+        else:
+            break
+
+    # innermost-level fusion: a lone leaf Drive under a two-factor
+    # arithmetic product lets execution batch the frontier x leaf-fiber
+    # expansion into one wide gather-multiply-bincount pass
+    leaf_fuse = None
+    lvl_last = levels[-1]
+    if (len(levels) >= 2 and isinstance(lvl_last.op, Drive)
+            and lvl_last.op.leaf and not lvl_last.lookups
+            and semiring.mul_vec is np.multiply
+            and semiring.add_vec is np.add
+            and out_initial is None
+            and isinstance(einsum.expr, BinOp) and einsum.expr.op == "*"
+            and isinstance(einsum.expr.lhs, TensorAccess)
+            and isinstance(einsum.expr.rhs, TensorAccess)):
+        factors = {einsum.expr.lhs.tensor, einsum.expr.rhs.tensor}
+        drv = lvl_last.op.tensor
+        if drv in factors and len(factors) == 2:
+            leaf_fuse = LeafFuse(driven=drv, other=(factors - {drv}).pop())
+
     red = Reduce(out_ranks=out_ranks, sources=sources, widths=widths,
                  upper_ranks={r for r in out_ranks
                               if plan.created_ranks.get(r) == "upper"},
                  semiring=semiring,
-                 has_initial=out_initial is not None)
+                 has_initial=out_initial is not None,
+                 prefix_sources=prefix_sources)
     return VectorPlan(name=plan.output, expr=einsum.expr, accs=accs,
                       levels=levels, reduce=red, essential=set(ex._essential),
                       leaf_depth=leaf_depth, capture_vars=capture_vars,
-                      semiring=semiring, pre_lookups=pre_lookups)
+                      semiring=semiring, pre_lookups=pre_lookups,
+                      leaf_fuse=leaf_fuse)
 
 
 # ---------------------------------------------------------------------- #

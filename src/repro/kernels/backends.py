@@ -1,0 +1,479 @@
+"""Pluggable kernel-backend registry for the vector engine's seams.
+
+The columnar ``VectorBackend`` funnels every data-parallel primitive
+through four *seams* -- ``intersect_keys`` / ``union_k_keys`` /
+``lookup_keys`` / ``segmented_reduce`` (plus the 2-ary ``union_keys``
+special case).  This module hosts the lowerings of those seams for each
+kernel backend and the registry that selects between them:
+
+  * ``numpy``            reference lowerings (vectorized ``searchsorted``
+                         / ``bincount``) -- the parity oracle every other
+                         backend must match bit-exactly.
+  * ``jax-jit``          the same formulations as jitted XLA programs
+                         (pow2-padded shapes to bound retraces, x64
+                         enabled so packed int64 keys survive).
+  * ``pallas-interpret`` the Pallas kernels (`intersect_sorted`,
+                         ``merge_sorted``, ``multi_merge_ranks``) run in
+                         interpret mode -- the CI leg that keeps the
+                         kernel bodies from bit-rotting on CPU runners.
+  * ``pallas-tpu``       the same kernels compiled to Mosaic; requires a
+                         TPU backend and refuses to resolve without one.
+
+Selection order: an explicit ``VectorBackend(kernel_backend=...)``
+argument wins, else the ``REPRO_KERNEL_BACKEND`` environment variable,
+else ``auto`` (pallas-tpu on TPU hosts, numpy otherwise).
+
+Parity contract (DESIGN.md "kernel dispatch"): for any admissible
+input, every backend returns arrays *bit-identical* to the numpy
+lowering -- positions, union orders, and float accumulation order all
+included.  Inputs outside a backend's admissible domain (e.g. keys
+beyond int32 for the Pallas kernels, semirings without a vectorized
+reduction for the jax scatter path) delegate to the numpy lowering per
+call, so parity is preserved rather than approximated.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+_I32_MAX = np.iinfo(np.int32).max
+_I64_PAD = np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------- #
+# reference lowerings
+# ---------------------------------------------------------------------- #
+class NumpyKernels:
+    """Vectorized ``searchsorted`` / ``bincount`` seam lowerings: the
+    bit-exactness oracle for every other backend."""
+
+    name = "numpy"
+
+    # -------------------------------------------------------------- #
+    def intersect_keys(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Positions in ``b`` of every element of ``a`` (both sorted
+        int64 key arrays; keys unique per array), -1 where absent."""
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        if len(a) == 0 or len(b) == 0:
+            return np.full(len(a), -1, dtype=np.int64)
+        pos = np.searchsorted(b, a)
+        safe = np.minimum(pos, len(b) - 1)
+        hit = (pos < len(b)) & (b[safe] == a)
+        return np.where(hit, safe, -1)
+
+    # -------------------------------------------------------------- #
+    def _positions(self, a: np.ndarray, u: np.ndarray) -> np.ndarray:
+        pos = np.searchsorted(a, u)
+        safe = np.minimum(pos, len(a) - 1)
+        hit = (pos < len(a)) & (a[safe] == u)
+        return np.where(hit, safe, -1).astype(np.int64)
+
+    def _merged_union(self, arrays: List[np.ndarray]) -> np.ndarray:
+        """Sorted union of the non-empty arrays (hook point: subclasses
+        override just the merge and inherit the position gathers)."""
+        if len(arrays) == 2:
+            return np.union1d(arrays[0], arrays[1])
+        return np.unique(np.concatenate(arrays))
+
+    def union_keys(self, a: np.ndarray, b: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Sorted union of two sorted int64 key arrays (keys unique per
+        array).  Returns (union, pos_a, pos_b): for every union element
+        its position in ``a`` / ``b`` or -1."""
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        if len(a) == 0:
+            return (b.copy(), np.full(len(b), -1, dtype=np.int64),
+                    np.arange(len(b), dtype=np.int64))
+        if len(b) == 0:
+            return (a.copy(), np.arange(len(a), dtype=np.int64),
+                    np.full(len(a), -1, dtype=np.int64))
+        u = self._merged_union([a, b])
+        return u, self._positions(a, u), self._positions(b, u)
+
+    def union_k_keys(self, arrays) -> Tuple[np.ndarray, list]:
+        """Sorted union of k sorted int64 key arrays (keys unique per
+        array).  Returns (union, [pos_i]): for every union element its
+        position in array i, or -1 where absent."""
+        arrays = [np.asarray(a, dtype=np.int64) for a in arrays]
+        if len(arrays) == 1:
+            a = arrays[0]
+            return a.copy(), [np.arange(len(a), dtype=np.int64)]
+        if len(arrays) == 2:
+            u, pa, pb = self.union_keys(arrays[0], arrays[1])
+            return u, [pa, pb]
+        nonempty = [a for a in arrays if len(a)]
+        if not nonempty:
+            z = np.zeros(0, dtype=np.int64)
+            return z, [z.copy() for _ in arrays]
+        u = self._merged_union(nonempty)
+        out = []
+        for a in arrays:
+            if len(a) == 0:
+                out.append(np.full(len(u), -1, dtype=np.int64))
+            else:
+                out.append(self._positions(a, u))
+        return u, out
+
+    # -------------------------------------------------------------- #
+    def lookup_keys(self, hay: np.ndarray, probes: np.ndarray
+                    ) -> np.ndarray:
+        """Positions in ``hay`` (sorted int64, unique) of every
+        ``probes`` element (arbitrary order, duplicates fine), -1 where
+        absent."""
+        hay = np.asarray(hay, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        if len(probes) == 0 or len(hay) == 0:
+            return np.full(len(probes), -1, dtype=np.int64)
+        pos = np.searchsorted(hay, probes)
+        safe = np.minimum(pos, len(hay) - 1)
+        hit = (pos < len(hay)) & (hay[safe] == probes)
+        return np.where(hit, safe, -1)
+
+    # -------------------------------------------------------------- #
+    def segmented_reduce(self, vals: np.ndarray, starts: np.ndarray,
+                         semiring=None,
+                         group_ids: Optional[np.ndarray] = None
+                         ) -> np.ndarray:
+        """Semiring-parameterized segmented reduction over a
+        fused-key-sorted value stream: ``starts[g]`` is the first index
+        of group ``g`` (ascending, ``starts[0] == 0``); returns one
+        reduced value per group.
+
+        Values fold strictly left-to-right within each group,
+        bit-identical to the interpreter's sequential ``semiring.add``
+        chain.  Three lowerings, fastest admissible wins:
+
+        * float addition (``add_vec is np.add``, the arithmetic
+          semiring) -- one ``np.bincount`` pass: its weighted
+          accumulation is a plain C loop in input order, and seeding
+          from 0.0 is exact for the nonzero payloads the nz-filtered
+          stream carries.  (NOT ``np.add.reduceat``: reduceat
+          pairwise-sums like ``reduce``, verified non-bit-identical to
+          the sequential fold.)
+        * a declared ``add_ufunc`` (min-plus: min is exact under any
+          association) -- one ``ufunc.reduceat``.
+        * otherwise -- a step-loop over ``add_vec`` bounded by the
+          largest group.
+
+        ``group_ids`` (optional, 0-based group index per element) lets
+        a caller that already materialized the group boundaries skip
+        their reconstruction on the bincount path."""
+        vals = np.asarray(vals)
+        starts = np.asarray(starts, dtype=np.int64)
+        n = len(vals)
+        if len(starts) == 0:
+            return vals[:0].copy()
+        if (semiring is None or semiring.add_vec is np.add) and \
+                vals.dtype == np.float64:
+            gids = group_ids
+            if gids is None:
+                gids = np.zeros(n, dtype=np.int64)
+                gids[starts[1:]] = 1
+                np.cumsum(gids, out=gids)
+            return np.bincount(gids, weights=vals, minlength=len(starts))
+        ufunc = None if semiring is None else semiring.add_ufunc
+        if ufunc is not None:
+            return ufunc.reduceat(vals, starts)
+        add_vec = np.add if semiring is None else semiring.add_vec
+        counts = np.diff(np.append(starts, n))
+        sums = vals[starts].copy()
+        step = 1
+        max_c = int(counts.max())
+        while step < max_c:
+            act = np.flatnonzero(counts > step)
+            sums[act] = add_vec(sums[act], vals[starts[act] + step])
+            step += 1
+        return sums
+
+
+# ---------------------------------------------------------------------- #
+# jax-jit: the same formulations as XLA programs
+# ---------------------------------------------------------------------- #
+def _pad_pow2(a: np.ndarray, fill) -> np.ndarray:
+    """Pad to the next power-of-two length (min 1) so jit retraces stay
+    O(log n) across the chunked frontier's varying stream sizes."""
+    n = len(a)
+    m = 1 << max(n, 1).bit_length() if n & (n - 1) or n == 0 else n
+    if m == n:
+        return a
+    out = np.full(m, fill, a.dtype)
+    out[:n] = a
+    return out
+
+
+@functools.cache
+def _jx():
+    """Jitted seam programs, built once.  All run under
+    ``enable_x64`` (packed offset keys reach 2^62)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def positions(hay, probes):
+        # positions of probes in hay, -1 where absent; pads
+        # (INT64_MAX) in hay sort past every real key, pad probes
+        # resolve to hay pads and are sliced off by the caller
+        n = hay.shape[0]
+        pos = jnp.searchsorted(hay, probes)
+        safe = jnp.minimum(pos, n - 1)
+        hit = (pos < n) & (hay[safe] == probes)
+        return jnp.where(hit, safe, -1)
+
+    @jax.jit
+    def merge_sort(cat):
+        return jnp.sort(cat)
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def seg_sum(vals, gids, out_len):
+        return jnp.zeros(out_len, vals.dtype).at[gids].add(vals)
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def seg_min(vals, gids, out_len):
+        init = jnp.full(out_len, jnp.inf, vals.dtype)
+        return init.at[gids].min(vals)
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def seg_max(vals, gids, out_len):
+        init = jnp.full(out_len, -jnp.inf, vals.dtype)
+        return init.at[gids].max(vals)
+
+    return positions, merge_sort, seg_sum, seg_min, seg_max
+
+
+class JaxJitKernels(NumpyKernels):
+    """XLA lowerings of the seams via ``jax.jit``: one fused program
+    per seam, shapes padded to powers of two to bound retraces.
+
+    Positions/unions are the identical binary-search formulation
+    (bit-exact by construction); the float segmented reduction uses an
+    XLA scatter-add, which applies duplicate updates in stream order on
+    CPU/TPU -- the same sequential fold as the bincount oracle (parity
+    is CI-asserted, not assumed)."""
+
+    name = "jax-jit"
+
+    def _jpositions(self, hay: np.ndarray, probes: np.ndarray
+                    ) -> np.ndarray:
+        positions, _, _, _, _ = _jx()
+        from jax.experimental import enable_x64
+        with enable_x64():
+            out = positions(_pad_pow2(hay, _I64_PAD),
+                            _pad_pow2(probes, _I64_PAD))
+        # hits against hay's pad tail are pad probes only (real keys
+        # are < 2^63-1), already sliced off; misses are already -1
+        return np.asarray(out)[:len(probes)].astype(np.int64)
+
+    def intersect_keys(self, a, b):
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        if len(a) == 0 or len(b) == 0:
+            return np.full(len(a), -1, dtype=np.int64)
+        return self._jpositions(b, a)
+
+    def _positions(self, a, u):
+        return self._jpositions(a, u)
+
+    def _merged_union(self, arrays):
+        _, merge_sort, _, _, _ = _jx()
+        from jax.experimental import enable_x64
+        total = sum(len(a) for a in arrays)
+        cat = _pad_pow2(np.concatenate(arrays), _I64_PAD)
+        with enable_x64():
+            merged = np.asarray(merge_sort(cat))[:total]
+        keep = np.ones(total, dtype=bool)
+        keep[1:] = merged[1:] != merged[:-1]
+        return merged[keep]
+
+    def lookup_keys(self, hay, probes):
+        hay = np.asarray(hay, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        if len(probes) == 0 or len(hay) == 0:
+            return np.full(len(probes), -1, dtype=np.int64)
+        if int(probes.max()) >= _I64_PAD:
+            return super().lookup_keys(hay, probes)
+        return self._jpositions(hay, probes)
+
+    def segmented_reduce(self, vals, starts, semiring=None,
+                         group_ids=None):
+        vals = np.asarray(vals)
+        starts = np.asarray(starts, dtype=np.int64)
+        n = len(vals)
+        if len(starts) == 0 or n == 0:
+            return super().segmented_reduce(vals, starts, semiring,
+                                            group_ids)
+        ufunc = None if semiring is None else semiring.add_ufunc
+        is_sum = (semiring is None or semiring.add_vec is np.add) and \
+            vals.dtype == np.float64
+        if not is_sum and ufunc not in (np.minimum, np.maximum):
+            return super().segmented_reduce(vals, starts, semiring,
+                                            group_ids)
+        gids = group_ids
+        if gids is None:
+            gids = np.zeros(n, dtype=np.int64)
+            gids[starts[1:]] = 1
+            np.cumsum(gids, out=gids)
+        n_groups = len(starts)
+        # pad the scatter stream with writes to a dummy slot past the
+        # real groups, so the output length is a pow2 static shape
+        out_len = 1 << max(n_groups + 1, 2).bit_length()
+        _, _, seg_sum, seg_min, seg_max = _jx()
+        from jax.experimental import enable_x64
+        fill = 0.0 if is_sum else (np.inf if ufunc is np.minimum
+                                   else -np.inf)
+        pv = _pad_pow2(np.ascontiguousarray(vals, dtype=np.float64), fill)
+        pg = np.full(len(pv), out_len - 1, dtype=np.int64)
+        pg[:n] = gids
+        fn = seg_sum if is_sum else (seg_min if ufunc is np.minimum
+                                     else seg_max)
+        with enable_x64():
+            out = fn(pv, pg, int(out_len))
+        res = np.asarray(out)[:n_groups]
+        if vals.dtype != np.float64:
+            res = res.astype(vals.dtype)
+        return res
+
+
+# ---------------------------------------------------------------------- #
+# pallas: the device kernels (interpret mode on CPU, Mosaic on TPU)
+# ---------------------------------------------------------------------- #
+def _fits_i32(a: np.ndarray) -> bool:
+    return len(a) == 0 or int(a[-1]) < _I32_MAX
+
+
+class PallasKernels(NumpyKernels):
+    """The Pallas kernels behind the seams: skip-ahead intersection,
+    merge-path 2-way union, k-ary ``multi_merge_ranks``.  Kernel input
+    contracts are int32 keys padded with INT32_MAX to a block multiple;
+    inputs whose key domain exceeds int32 delegate to the numpy
+    lowering per call (parity over partial coverage).  The segmented
+    reduction inherits the numpy lowering -- a segmented-scan kernel is
+    the next seam to move on-device."""
+
+    def __init__(self, interpret: bool):
+        self.interpret = interpret
+        self.name = "pallas-interpret" if interpret else "pallas-tpu"
+
+    def intersect_keys(self, a, b):
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        if len(a) == 0 or len(b) == 0:
+            return np.full(len(a), -1, dtype=np.int64)
+        if not (_fits_i32(a) and _fits_i32(b)):
+            return super().intersect_keys(a, b)
+        import jax.numpy as jnp
+        from repro.kernels import intersect as _isect
+        from repro.kernels import ops as _ops
+        pa = _ops.pad_sorted(a.astype(np.int32), 512)
+        pb = _ops.pad_sorted(b.astype(np.int32), 512)
+        idx = np.asarray(_isect.intersect_sorted(
+            jnp.asarray(pa), jnp.asarray(pb), block=512,
+            interpret=self.interpret))[:len(a)]
+        return idx.astype(np.int64)
+
+    def _merged_union(self, arrays):
+        if not all(_fits_i32(a) for a in arrays):
+            return super()._merged_union(arrays)
+        import jax.numpy as jnp
+        from repro.kernels import ops as _ops
+        if len(arrays) == 2:
+            # merge-path kernel + host dedup; pads merge to the tail
+            pa32 = _ops.pad_sorted(arrays[0].astype(np.int32), 256)
+            pb32 = _ops.pad_sorted(arrays[1].astype(np.int32), 256)
+            merged, _ = _ops.merge_sorted(
+                jnp.asarray(pa32), jnp.asarray(pb32), block=256,
+                interpret=self.interpret)
+            merged = np.asarray(merged, dtype=np.int64)
+            merged = merged[merged < _I32_MAX]
+        else:
+            # k-ary multi-merge: every element finds its global rank in
+            # the stable merge in one launch
+            n_pad = max(len(_ops.pad_sorted(a.astype(np.int32), 256))
+                        for a in arrays)
+            stacked = np.stack([
+                np.concatenate([a.astype(np.int32),
+                                np.full(n_pad - len(a), _I32_MAX,
+                                        np.int32)])
+                for a in arrays])
+            ranks = np.asarray(_ops.multi_merge_ranks(
+                jnp.asarray(stacked), interpret=self.interpret))
+            total = sum(len(a) for a in arrays)
+            # real keys are < INT32_MAX, so every pad ranks after every
+            # real element and real ranks land in [0, total)
+            merged = np.empty(total, dtype=np.int64)
+            for i, a in enumerate(arrays):
+                merged[ranks[i, :len(a)]] = a
+        keep = np.ones(len(merged), dtype=bool)
+        keep[1:] = merged[1:] != merged[:-1]
+        return merged[keep]
+
+    def lookup_keys(self, hay, probes):
+        hay = np.asarray(hay, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        if len(probes) == 0 or len(hay) == 0:
+            return np.full(len(probes), -1, dtype=np.int64)
+        if not (_fits_i32(hay) and int(probes.max()) < _I32_MAX
+                and int(probes.min()) >= 0):
+            return super().lookup_keys(hay, probes)
+        # probes are sorted, pushed through the skip-ahead intersection
+        # kernel, and unsorted
+        order = np.argsort(probes, kind="stable")
+        idx_sorted = self.intersect_keys(probes[order], hay)
+        idx = np.empty(len(probes), dtype=np.int64)
+        idx[order] = idx_sorted
+        return idx
+
+
+# ---------------------------------------------------------------------- #
+# registry
+# ---------------------------------------------------------------------- #
+_INSTANCES: dict = {}
+
+KERNEL_BACKENDS = ("numpy", "jax-jit", "pallas-interpret", "pallas-tpu")
+
+#: environment override consulted when no explicit backend is passed
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+def _make(name: str):
+    if name == "numpy":
+        return NumpyKernels()
+    if name == "jax-jit":
+        return JaxJitKernels()
+    if name == "pallas-interpret":
+        return PallasKernels(interpret=True)
+    if name == "pallas-tpu":
+        import jax
+        if jax.default_backend() != "tpu":
+            raise RuntimeError(
+                "kernel backend 'pallas-tpu' requires a TPU jax backend "
+                f"(found {jax.default_backend()!r}); use "
+                "'pallas-interpret' for CPU validation")
+        return PallasKernels(interpret=False)
+    raise ValueError(
+        f"unknown kernel backend {name!r}; choose from {KERNEL_BACKENDS} "
+        f"or 'auto'")
+
+
+def resolve_kernel_backend(which=None):
+    """Resolve a kernel backend: an instance passes through, a name hits
+    the registry, ``None`` consults ``$REPRO_KERNEL_BACKEND`` then
+    ``auto`` (pallas-tpu on TPU hosts, numpy elsewhere)."""
+    if which is not None and not isinstance(which, str):
+        return which
+    name = which or os.environ.get(ENV_VAR) or "auto"
+    if name == "auto":
+        try:
+            import jax
+            on_tpu = jax.default_backend() == "tpu"
+        except Exception:
+            on_tpu = False
+        name = "pallas-tpu" if on_tpu else "numpy"
+    inst = _INSTANCES.get(name)
+    if inst is None:
+        inst = _INSTANCES[name] = _make(name)
+    return inst

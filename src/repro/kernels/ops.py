@@ -7,11 +7,16 @@ calls compile to Mosaic.
 Also hosts the sorted-coordinate co-iteration primitives used by the
 vectorized execution backend (``repro.core.vectorized``): skip-ahead
 intersection and merge-path union over *offset-keyed* fibers (many
-fibers packed into one globally sorted key array).  On TPU these run
-the Pallas kernels; on CPU they lower to the equivalent
-``np.searchsorted`` formulation, because interpret-mode Pallas re-runs
-the kernel body per grid step and would dominate the very loop nests
-the vector backend exists to accelerate (DESIGN.md, "TPU adaptation").
+fibers packed into one globally sorted key array).  The module-level
+seam functions (``intersect_keys`` / ``union_k_keys`` / ``lookup_keys``
+/ ``segmented_reduce``) dispatch through the pluggable kernel-backend
+registry in ``repro.kernels.backends`` -- numpy ``searchsorted``
+reference lowerings, jitted XLA programs, or the Pallas kernels
+(interpret mode on CPU, Mosaic on TPU) -- selected per process via
+``$REPRO_KERNEL_BACKEND`` (see ``backends.resolve_kernel_backend``).
+``VectorBackend`` holds its own resolved backend instance and bypasses
+these wrappers; they remain the stable entry points for tests and
+external callers.
 """
 from __future__ import annotations
 
@@ -197,27 +202,21 @@ def _fits_i32(a: np.ndarray) -> bool:
     return len(a) == 0 or int(a[-1]) < _I32_MAX
 
 
+def _kb():
+    """The process-default kernel backend (env-resolved per call, so
+    tests may flip ``$REPRO_KERNEL_BACKEND`` between calls)."""
+    from repro.kernels import backends as _backends
+    return _backends.resolve_kernel_backend()
+
+
 def intersect_keys(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Positions in ``b`` of every element of ``a`` (both sorted int64
     key arrays; keys unique per array), -1 where absent.
 
-    TPU: Pallas skip-ahead intersection kernel (int32 key domain).
-    CPU: the same vectorized-binary-search semantics via searchsorted.
-    """
-    a = np.asarray(a, dtype=np.int64)
-    b = np.asarray(b, dtype=np.int64)
-    if len(a) == 0 or len(b) == 0:
-        return np.full(len(a), -1, dtype=np.int64)
-    if _on_tpu() and _fits_i32(a) and _fits_i32(b):
-        pa = pad_sorted(a.astype(np.int32), 512)
-        pb = pad_sorted(b.astype(np.int32), 512)
-        idx = np.asarray(_isect.intersect_sorted(
-            jnp.asarray(pa), jnp.asarray(pb), block=512))[:len(a)]
-        return idx.astype(np.int64)
-    pos = np.searchsorted(b, a)
-    safe = np.minimum(pos, len(b) - 1)
-    hit = (pos < len(b)) & (b[safe] == a)
-    return np.where(hit, safe, -1)
+    Dispatches to the active kernel backend: numpy ``searchsorted``,
+    a jitted XLA binary search, or the Pallas skip-ahead intersection
+    kernel (int32 key domain)."""
+    return _kb().intersect_keys(a, b)
 
 
 def union_keys(a: np.ndarray, b: np.ndarray
@@ -226,37 +225,8 @@ def union_keys(a: np.ndarray, b: np.ndarray
     array).  Returns (union, pos_a, pos_b): for every union element its
     position in ``a`` / ``b`` or -1.
 
-    TPU: Pallas merge-path kernel + host dedup; CPU: searchsorted."""
-    a = np.asarray(a, dtype=np.int64)
-    b = np.asarray(b, dtype=np.int64)
-    if len(a) == 0:
-        return (b.copy(), np.full(len(b), -1, dtype=np.int64),
-                np.arange(len(b), dtype=np.int64))
-    if len(b) == 0:
-        return (a.copy(), np.arange(len(a), dtype=np.int64),
-                np.full(len(a), -1, dtype=np.int64))
-    if _on_tpu() and _fits_i32(a) and _fits_i32(b):
-        # the kernel's input contract: sorted int32, PAD-padded to a
-        # block multiple; pads merge to the tail and are stripped here
-        pa32 = pad_sorted(a.astype(np.int32), 256)
-        pb32 = pad_sorted(b.astype(np.int32), 256)
-        merged, _ = merge_sorted(jnp.asarray(pa32), jnp.asarray(pb32),
-                                 block=256)
-        merged = np.asarray(merged, dtype=np.int64)
-        merged = merged[merged < _I32_MAX]
-        keep = np.ones(len(merged), dtype=bool)
-        keep[1:] = merged[1:] != merged[:-1]
-        u = merged[keep]
-    else:
-        u = np.union1d(a, b)
-    pos_a = np.searchsorted(a, u)
-    safe_a = np.minimum(pos_a, len(a) - 1)
-    hit_a = (pos_a < len(a)) & (a[safe_a] == u)
-    pos_b = np.searchsorted(b, u)
-    safe_b = np.minimum(pos_b, len(b) - 1)
-    hit_b = (pos_b < len(b)) & (b[safe_b] == u)
-    return (u, np.where(hit_a, safe_a, -1).astype(np.int64),
-            np.where(hit_b, safe_b, -1).astype(np.int64))
+    Pallas backends run the merge-path kernel + host dedup."""
+    return _kb().union_keys(a, b)
 
 
 def union_k_keys(arrays) -> Tuple[np.ndarray, list]:
@@ -265,46 +235,9 @@ def union_k_keys(arrays) -> Tuple[np.ndarray, list]:
     position in array i, or -1 where absent.
 
     k == 2 delegates to ``union_keys``; larger fan-ins run the k-ary
-    multi-merge Pallas kernel on TPU and a concatenate-and-unique
-    ``searchsorted`` lowering on CPU."""
-    arrays = [np.asarray(a, dtype=np.int64) for a in arrays]
-    if len(arrays) == 1:
-        a = arrays[0]
-        return a.copy(), [np.arange(len(a), dtype=np.int64)]
-    if len(arrays) == 2:
-        u, pa, pb = union_keys(arrays[0], arrays[1])
-        return u, [pa, pb]
-    nonempty = [a for a in arrays if len(a)]
-    if not nonempty:
-        z = np.zeros(0, dtype=np.int64)
-        return z, [z.copy() for _ in arrays]
-    if _on_tpu() and all(_fits_i32(a) for a in nonempty):
-        n_pad = max(len(pad_sorted(a.astype(np.int32), 256))
-                    for a in nonempty)
-        stacked = np.stack([
-            np.concatenate([a.astype(np.int32),
-                            np.full(n_pad - len(a), _I32_MAX, np.int32)])
-            for a in arrays])
-        ranks = np.asarray(multi_merge_ranks(jnp.asarray(stacked)))
-        total = sum(len(a) for a in arrays)
-        merged = np.empty(total, dtype=np.int64)
-        for i, a in enumerate(arrays):
-            merged[ranks[i, :len(a)]] = a
-        keep = np.ones(total, dtype=bool)
-        keep[1:] = merged[1:] != merged[:-1]
-        u = merged[keep]
-    else:
-        u = np.unique(np.concatenate(nonempty))
-    out = []
-    for a in arrays:
-        if len(a) == 0:
-            out.append(np.full(len(u), -1, dtype=np.int64))
-            continue
-        pos = np.searchsorted(a, u)
-        safe = np.minimum(pos, len(a) - 1)
-        hit = (pos < len(a)) & (a[safe] == u)
-        out.append(np.where(hit, safe, -1).astype(np.int64))
-    return u, out
+    ``multi_merge_ranks`` Pallas kernel on the pallas backends and a
+    concatenate-and-unique ``searchsorted`` lowering on numpy."""
+    return _kb().union_k_keys(arrays)
 
 
 def lookup_keys(hay: np.ndarray, probes: np.ndarray) -> np.ndarray:
@@ -312,22 +245,10 @@ def lookup_keys(hay: np.ndarray, probes: np.ndarray) -> np.ndarray:
     int64, unique) of every ``probes`` element (arbitrary order,
     duplicates fine), -1 where absent.
 
-    TPU: probes are sorted, pushed through the skip-ahead intersection
-    kernel, and unsorted; CPU: one vectorized ``searchsorted``."""
-    hay = np.asarray(hay, dtype=np.int64)
-    probes = np.asarray(probes, dtype=np.int64)
-    if len(probes) == 0 or len(hay) == 0:
-        return np.full(len(probes), -1, dtype=np.int64)
-    if _on_tpu() and _fits_i32(hay) and int(probes.max()) < _I32_MAX:
-        order = np.argsort(probes, kind="stable")
-        idx_sorted = intersect_keys(probes[order], hay)
-        idx = np.empty(len(probes), dtype=np.int64)
-        idx[order] = idx_sorted
-        return idx
-    pos = np.searchsorted(hay, probes)
-    safe = np.minimum(pos, len(hay) - 1)
-    hit = (pos < len(hay)) & (hay[safe] == probes)
-    return np.where(hit, safe, -1)
+    Pallas backends sort the probes, push them through the skip-ahead
+    intersection kernel, and unsort; numpy is one vectorized
+    ``searchsorted``."""
+    return _kb().lookup_keys(hay, probes)
 
 
 def lookup_keys_shifted(hay: np.ndarray, probes: np.ndarray,
@@ -338,8 +259,7 @@ def lookup_keys_shifted(hay: np.ndarray, probes: np.ndarray,
     pack would alias into the preceding fiber's key range.
 
     The shift folds into the probe stream, so this rides the exact same
-    Pallas dispatch seam as ``lookup_keys`` (skip-ahead intersection on
-    TPU, one vectorized ``searchsorted`` on CPU)."""
+    kernel-backend seam as ``lookup_keys``."""
     probes = np.asarray(probes, dtype=np.int64)
     shifted = probes + int(shift)
     neg = shifted < 0
@@ -353,7 +273,7 @@ def intersect_keys_shifted(a: np.ndarray, b: np.ndarray,
                            shift: int = 0) -> np.ndarray:
     """Positions in ``b`` of every element of ``a + shift`` (windowed
     intersection: a constant shift keeps ``a`` sorted, so the shifted
-    stream reuses ``intersect_keys``'s skip-ahead kernel unchanged).
+    stream reuses ``intersect_keys``\'s skip-ahead kernel unchanged).
     Negative shifted elements are misses (-1)."""
     a = np.asarray(a, dtype=np.int64)
     shifted = a + int(shift)
@@ -371,55 +291,11 @@ def segmented_reduce(vals: np.ndarray, starts: np.ndarray,
     """Semiring-parameterized segmented reduction over a fused-key-sorted
     value stream: ``starts[g]`` is the first index of group ``g``
     (ascending, ``starts[0] == 0``); returns one reduced value per group.
-
     Values fold strictly left-to-right within each group, bit-identical
-    to the interpreter's sequential ``semiring.add`` chain.  Three
-    lowerings, fastest admissible wins:
-
-    * float addition (``add_vec is np.add``, the arithmetic semiring)
-      -- one ``np.bincount`` pass: its weighted accumulation is a plain
-      C loop in input order, and seeding from 0.0 is exact for the
-      nonzero payloads the nz-filtered stream carries.  (NOT
-      ``np.add.reduceat``: reduceat pairwise-sums like ``reduce``,
-      verified non-bit-identical to the sequential fold.)
-    * a declared ``add_ufunc`` (min-plus: min is exact under any
-      association) -- one ``ufunc.reduceat``.
-    * otherwise -- a step-loop over ``add_vec`` bounded by the largest
-      group.
-
-    ``group_ids`` (optional, 0-based group index per element) lets a
-    caller that already materialized the group boundaries skip their
-    reconstruction on the bincount path.
-
-    CPU lowering today; slotted for the same Pallas dispatch seam as
-    ``multi_merge_ranks`` (segmented-scan kernel) once key domains are
-    packed int32."""
-    vals = np.asarray(vals)
-    starts = np.asarray(starts, dtype=np.int64)
-    n = len(vals)
-    if len(starts) == 0:
-        return vals[:0].copy()
-    if (semiring is None or semiring.add_vec is np.add) and \
-            vals.dtype == np.float64:
-        gids = group_ids
-        if gids is None:
-            gids = np.zeros(n, dtype=np.int64)
-            gids[starts[1:]] = 1
-            np.cumsum(gids, out=gids)
-        return np.bincount(gids, weights=vals, minlength=len(starts))
-    ufunc = None if semiring is None else semiring.add_ufunc
-    if ufunc is not None:
-        return ufunc.reduceat(vals, starts)
-    add_vec = np.add if semiring is None else semiring.add_vec
-    counts = np.diff(np.append(starts, n))
-    sums = vals[starts].copy()
-    step = 1
-    max_c = int(counts.max())
-    while step < max_c:
-        act = np.flatnonzero(counts > step)
-        sums[act] = add_vec(sums[act], vals[starts[act] + step])
-        step += 1
-    return sums
+    to the interpreter\'s sequential ``semiring.add`` chain (lowering
+    notes: ``backends.NumpyKernels.segmented_reduce``)."""
+    return _kb().segmented_reduce(vals, starts, semiring,
+                                  group_ids=group_ids)
 
 
 # ---------------------------------------------------------------------- #

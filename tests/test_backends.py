@@ -337,3 +337,108 @@ def test_execute_csf_skips_materialization(rng, spmat):
     got[:d.shape[0], :d.shape[1]] = d
     assert np.allclose(got, want)
     assert stats["muls"] > 0 and stats["out_nnz"] == out_csf.nnz
+
+
+# ---------------------------------------------------------------------- #
+# the two remaining vector-path fallback reasons, encoded
+# ---------------------------------------------------------------------- #
+def _non_atomic_sum_spec():
+    from repro.core.spec import load_spec
+    return load_spec({
+        "name": "NonAtomicSum",
+        "einsum": {
+            "declaration": {"A": ["M", "K"], "B": ["K", "N"],
+                            "C": ["M", "N"], "Z": ["M", "N"]},
+            "expressions": ["Z[m, n] = A[m, k] * B[k, n] + C[m, n]"],
+        },
+        "mapping": {"loop-order": {"Z": ["M", "K", "N"]}},
+    })
+
+
+def _update_in_place_swapped_spec():
+    from repro.core.spec import load_spec
+    return load_spec({
+        "name": "UpdateInPlaceSwapped",
+        "einsum": {
+            "declaration": {"B": ["M", "N"], "Z": ["M", "N"]},
+            "expressions": ["Z[m, n] = B[m, n]"],
+        },
+        # Z arrives pre-seeded (a run input, GraphDynS-style filtered
+        # write) but the write executes N-major while the seed stays
+        # M-major in storage -> out_initial is not in execution form
+        "mapping": {"rank-order": {"B": ["M", "N"], "Z": ["M", "N"]},
+                    "loop-order": {"Z": ["N", "M"]}},
+    })
+
+
+def _update_in_place_backend_call(rng, spmat, backend):
+    """Drive the backend seam directly with a declared-order (M-major)
+    seed while the Einsum executes N-major.  The generator's
+    ``transform_tensor`` re-swizzles every spec-reachable seed into
+    execution form, so this remaining vplan fallback class has no zoo
+    representative (see benchmarks/run.py REMAINING_REASONS) -- it is
+    only observable at the ``execute(out_initial=...)`` API."""
+    from repro.core.fibertree import FTensor
+    from repro.core.mapping import MappingResolver
+
+    spec = _update_in_place_swapped_spec()
+    resolver = MappingResolver(spec)
+    plan = resolver.plan("Z")
+    b = spmat(rng, 12, 12, 0.4)
+    z = spmat(rng, 12, 12, 0.4)
+    exec_forms = resolver.transform_all(
+        "Z", {"B": FTensor.from_dense("B", ["M", "N"], b)})
+    seed = FTensor.from_dense("Z", ["M", "N"], z)   # declared order
+    assert list(seed.ranks) != plan.tensors["Z"].exec_order
+    backend.execute(plan, exec_forms, {"m": 12, "n": 12},
+                    out_initial=seed)
+    return backend
+
+
+def _fallback_inputs(rng, spmat):
+    a, b = spmat(rng, 12, 12, 0.4), spmat(rng, 12, 12, 0.4)
+    return {"A": a, "B": b, "C": spmat(rng, 12, 12, 0.4)}, \
+        {"m": 12, "k": 12, "n": 12}
+
+
+def test_remaining_fallback_reasons_surfaced(rng, spmat):
+    """The two plans still outside the VectorPlan IR fall back loudly,
+    with their reason strings recorded (and outputs still bit-exact
+    via the oracle -- assert_equivalent covers that)."""
+    inputs, shapes = _fallback_inputs(rng, spmat)
+    assert_equivalent(_non_atomic_sum_spec(), inputs, shapes)
+    sim = CascadeSimulator(_non_atomic_sum_spec(), model=False,
+                           backend="vector")
+    res = sim.run(dict(inputs), shapes)
+    assert "sum of non-atomic terms" in res.fallback_reasons.get("Z", "")
+
+    # through the simulator the seed is re-formed, so the cascade runs
+    # native end to end (and stays bit-exact vs the oracle)
+    ui = {"Z": inputs["A"], "B": inputs["B"]}
+    assert_equivalent(_update_in_place_swapped_spec(), ui,
+                      {"m": 12, "n": 12})
+    # at the backend seam a declared-order seed falls back loudly
+    vb = _update_in_place_backend_call(rng, spmat, VectorBackend())
+    assert vb.last_path == "fallback"
+    assert "update-in-place output not in execution form" in \
+        (vb.last_fallback_reason or "")
+
+
+@pytest.mark.xfail(strict=True,
+                   reason="sums of non-atomic terms are not lowered to "
+                          "the VectorPlan IR yet (vplan.lower)")
+def test_non_atomic_sum_runs_native(rng, spmat):
+    inputs, shapes = _fallback_inputs(rng, spmat)
+    sim = CascadeSimulator(_non_atomic_sum_spec(), model=False,
+                           backend="vector")
+    res = sim.run(dict(inputs), shapes)
+    assert res.fallback_reasons == {}
+
+
+@pytest.mark.xfail(strict=True,
+                   reason="update-in-place seeds whose stored rank order "
+                          "differs from execution order are not "
+                          "re-swizzled by the vector path yet")
+def test_update_in_place_swapped_runs_native(rng, spmat):
+    vb = _update_in_place_backend_call(rng, spmat, VectorBackend())
+    assert vb.last_path == "vector"

@@ -259,3 +259,163 @@ def test_lookup_keys_probe_path():
     assert len(ops.lookup_keys(hay, np.zeros(0, dtype=np.int64))) == 0
     assert (ops.lookup_keys(np.zeros(0, dtype=np.int64), probes)
             == -1).all()
+
+
+# ---------------------------------------------------------------------- #
+# kernel-backend registry: parity of the four dispatch seams
+# ---------------------------------------------------------------------- #
+from repro.kernels import backends as kbk
+from repro.core.einsum import Semiring
+
+CPU_BACKENDS = ["numpy", "jax-jit", "pallas-interpret"]
+
+#: adversarial key domains: dense duplicates-across-arrays, empty
+#: arrays, sparse, and keys hugging the int32 / packed-int64 boundaries
+_KEY_DOMAINS = [
+    ("dense", 0, 500),
+    ("empty", 0, 1),
+    ("sparse", 0, 1 << 20),
+    ("i32_boundary", np.iinfo(np.int32).max - 400,
+     np.iinfo(np.int32).max),
+    ("i64_packed", (1 << 62) - 2000, (1 << 62) - 1),
+]
+
+
+def _keys(rng, lo, hi, n):
+    n = min(n, hi - lo)
+    if n <= 0:
+        return np.zeros(0, dtype=np.int64)
+    return np.sort(rng.choice(np.arange(lo, hi, dtype=np.int64),
+                              size=n, replace=False))
+
+
+@pytest.mark.parametrize("name", CPU_BACKENDS)
+@pytest.mark.parametrize("dom", _KEY_DOMAINS, ids=lambda d: d[0])
+def test_registry_seam_parity(name, dom):
+    """Every CPU kernel backend is bit-identical to the numpy oracle on
+    all four dispatch seams, including empty and boundary domains."""
+    _, lo, hi = dom
+    rng = np.random.default_rng(11)
+    ref_kb = kbk.resolve_kernel_backend("numpy")
+    kb = kbk.resolve_kernel_backend(name)
+    for trial in range(5):
+        a = _keys(rng, lo, hi, int(rng.integers(0, 300)))
+        b = _keys(rng, lo, hi, int(rng.integers(0, 300)))
+        c = _keys(rng, lo, hi, int(rng.integers(0, 300)))
+        np.testing.assert_array_equal(kb.intersect_keys(a, b),
+                                      ref_kb.intersect_keys(a, b))
+        u, pos = kb.union_k_keys([a, b, c])
+        ur, posr = ref_kb.union_k_keys([a, b, c])
+        np.testing.assert_array_equal(u, ur)
+        for p, pr in zip(pos, posr):
+            np.testing.assert_array_equal(p, pr)
+        # duplicate-heavy probes (arbitrary order)
+        probes = rng.choice(np.concatenate([a, [lo, hi - 1]]),
+                            size=200) if len(a) else \
+            np.zeros(0, dtype=np.int64)
+        np.testing.assert_array_equal(kb.lookup_keys(a, probes),
+                                      ref_kb.lookup_keys(a, probes))
+
+
+@pytest.mark.parametrize("name", CPU_BACKENDS)
+@pytest.mark.parametrize("sr", ["arithmetic", "min_plus", "or_and"],
+                         ids=str)
+def test_registry_segmented_reduce_parity(name, sr):
+    rng = np.random.default_rng(13)
+    kb = kbk.resolve_kernel_backend(name)
+    ref_kb = kbk.resolve_kernel_backend("numpy")
+    semiring = getattr(Semiring, sr)()
+    for n in (0, 1, 7, 1000):
+        vals = (rng.random(n) * 2 - 1 if sr != "or_and"
+                else (rng.random(n) < 0.5).astype(np.float64))
+        gids = np.sort(rng.integers(0, max(n // 3, 1), size=n))
+        gids = np.cumsum(np.diff(gids, prepend=-1) > 0) - 1
+        starts = np.flatnonzero(np.diff(gids, prepend=-1) > 0)
+        got = kb.segmented_reduce(vals, starts, semiring, group_ids=gids)
+        want = ref_kb.segmented_reduce(vals, starts, semiring,
+                                       group_ids=gids)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shift", [-3, 0, 5, 10_000])
+def test_shifted_seams_vs_numpy(shift):
+    """lookup_keys_shifted / intersect_keys_shifted agree with a plain
+    numpy model on duplicate-heavy, empty, and i32-boundary inputs,
+    whatever kernel backend is active."""
+    rng = np.random.default_rng(23)
+    cases = [
+        (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)),
+        (_keys(rng, 0, 100, 60), _keys(rng, 0, 100, 60)),
+        (_keys(rng, np.iinfo(np.int32).max - 300,
+               np.iinfo(np.int32).max, 100),
+         _keys(rng, np.iinfo(np.int32).max - 300,
+               np.iinfo(np.int32).max, 100)),
+    ]
+    for hay, srt in cases:
+        probes = (rng.choice(hay, size=150) if len(hay)
+                  else np.zeros(0, dtype=np.int64))
+        got = ops.lookup_keys_shifted(hay, probes, shift=shift)
+        want = np.full(len(probes), -1, dtype=np.int64)
+        for i, p in enumerate(probes):
+            j = np.searchsorted(hay, p + shift)
+            if (p + shift >= 0 and j < len(hay)
+                    and hay[j] == p + shift):
+                want[i] = j
+        np.testing.assert_array_equal(got, want)
+
+        got = ops.intersect_keys_shifted(srt, hay, shift=shift)
+        want = np.full(len(srt), -1, dtype=np.int64)
+        for i, p in enumerate(srt):
+            j = np.searchsorted(hay, p + shift)
+            if (p + shift >= 0 and j < len(hay)
+                    and hay[j] == p + shift):
+                want[i] = j
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,n_max", [(3, 40), (4, 200), (6, 90)])
+def test_multi_merge_ranks_adversarial(k, n_max):
+    """The k-way merge-rank kernel (interpret) against the numpy stable
+    merge on duplicate-heavy rows (same keys in many rows), ragged
+    lengths, and keys at the int32 boundary."""
+    rng = np.random.default_rng(29)
+    base = np.sort(rng.choice(120, size=30, replace=False))
+    hi = np.iinfo(np.int32).max
+    rows = []
+    for i in range(k):
+        if i % 3 == 0:        # duplicate-heavy: overlaps `base` a lot
+            r = np.sort(rng.choice(base, size=min(len(base), n_max),
+                                   replace=False))
+        elif i % 3 == 1:      # i32-boundary keys
+            r = np.sort(rng.choice(np.arange(hi - 500, hi - 1),
+                                   size=rng.integers(1, n_max),
+                                   replace=False))
+        else:
+            r = np.sort(rng.choice(5000, size=rng.integers(1, n_max),
+                                   replace=False))
+        rows.append(r.astype(np.int32))
+    n_pad = max(int(np.ceil(max(len(r) for r in rows) / 64)) * 64, 64)
+    stacked = np.stack([
+        np.concatenate([r, np.full(n_pad - len(r), hi, np.int32)])
+        for r in rows])
+    ranks = np.asarray(ops.multi_merge_ranks(jnp.asarray(stacked),
+                                             block=64, interpret=True))
+    total = sum(len(r) for r in rows)
+    merged = np.empty(total, dtype=np.int64)
+    for i, r in enumerate(rows):
+        got = ranks[i, :len(r)]
+        assert got.min() >= 0 and got.max() < total
+        merged[got] = r
+    np.testing.assert_array_equal(
+        merged, np.sort(np.concatenate(rows)))
+
+
+def test_env_var_selects_backend(monkeypatch):
+    monkeypatch.setenv(kbk.ENV_VAR, "jax-jit")
+    assert kbk.resolve_kernel_backend().name == "jax-jit"
+    monkeypatch.setenv(kbk.ENV_VAR, "pallas-interpret")
+    assert kbk.resolve_kernel_backend().name == "pallas-interpret"
+    monkeypatch.delenv(kbk.ENV_VAR)
+    assert kbk.resolve_kernel_backend("numpy").name == "numpy"
+    with pytest.raises(Exception):
+        kbk.resolve_kernel_backend("no-such-backend")
