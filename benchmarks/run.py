@@ -59,8 +59,18 @@ def explain_fallbacks(backend: str) -> int:
     print("cascade,einsum,reason")
     n_fallbacks = 0
 
-    def report(name, reasons):
+    def report(name, reasons, downgrades=None):
         nonlocal n_fallbacks
+        # kernel-level degradation-chain events (seam faults absorbed
+        # by the guarded dispatcher) -- distinct from Einsum fallbacks:
+        # the Einsum still ran on the vector path, just on a lower
+        # backend; reported for visibility, not counted against the
+        # native-coverage gate
+        for einsum, evs in sorted((downgrades or {}).items()):
+            for ev in evs:
+                arrow = f"->{ev.fallback}" if ev.fallback else ""
+                print(f"{name},{einsum},DOWNGRADE {ev.action} "
+                      f"{ev.seam}@{ev.backend}{arrow}: {ev.exc_type}")
         if not reasons:
             print(f"{name},-,native")
             return
@@ -81,7 +91,8 @@ def explain_fallbacks(backend: str) -> int:
             print(f"{name},-,ERROR: {e}")
             n_fallbacks += 1
             continue
-        report(name, res.fallback_reasons)
+        report(name, res.fallback_reasons,
+               getattr(res, "downgrade_events", None))
 
     # graph designs: one BFS (unweighted) + one SSSP (weighted) pass
     # under the min-plus semiring on a small grid frontier
@@ -104,13 +115,15 @@ def explain_fallbacks(backend: str) -> int:
                 print(f"{name}/{algo},-,ERROR: {e}")
                 n_fallbacks += 1
                 continue
-            report(f"{name}/{algo}", res.fallback_reasons)
+            report(f"{name}/{algo}", res.fallback_reasons,
+                   getattr(res, "downgrade_events", None))
 
     for name in sorted(ZOO):
         inputs, shp = _inputs(name, np.random.default_rng(0))
         sim = CascadeSimulator(ZOO[name](), model=False, backend=backend)
         res = sim.run(dict(inputs), shp)
-        report(name, res.fallback_reasons)
+        report(name, res.fallback_reasons,
+               getattr(res, "downgrade_events", None))
     if n_fallbacks == 0:
         print("# full native coverage; plan classes still outside the "
               "IR (no zoo representative):", file=sys.stderr)

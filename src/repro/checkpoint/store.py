@@ -78,6 +78,22 @@ def save_checkpoint(directory: str | Path, step: int, tree: Params,
     return final
 
 
+def load_manifest(directory: str | Path,
+                  step: Optional[int] = None) -> Dict[str, Any]:
+    """The manifest dict of a checkpoint (latest by default) without
+    touching the leaves.  Lets a consumer that stored its structure in
+    ``extra_meta`` (e.g. sweep checkpoints: point labels, error
+    strings) rebuild a ``like`` pytree before calling
+    :func:`load_checkpoint`."""
+    directory = Path(directory)
+    if step is None:
+        latest = (directory / "LATEST").read_text().strip()
+        path = directory / latest
+    else:
+        path = directory / f"step_{step:09d}"
+    return json.loads((path / "manifest.json").read_text())
+
+
 def load_checkpoint(directory: str | Path, step: Optional[int] = None,
                     like: Optional[Params] = None) -> Tuple[Params, int]:
     """Load a checkpoint as host numpy arrays, re-built into the

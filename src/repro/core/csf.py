@@ -30,6 +30,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import guards
 from .fibertree import Fiber, FTensor
 
 COORD_DTYPE = np.int32
@@ -75,6 +76,8 @@ class CSF:
         for d in range(1, len(self.ranks)):
             seg = self.segments[d]
             assert seg is not None and len(seg) == len(self.coords[d - 1]) + 1
+            guards.check_monotone_segments(
+                seg, f"csf:{self.name}:{self.ranks[d]}")
         assert len(self.values) == (len(self.coords[-1]) if self.ranks else 0)
 
     # ------------------------------------------------------------------ #

@@ -142,6 +142,10 @@ class SimResult:
     #: through the Python oracle instead of its fast path (empty when
     #: every Einsum ran native)
     fallback_reasons: Dict[str, str] = field(default_factory=dict)
+    #: einsum -> kernel-dispatch DowngradeEvents recorded while that
+    #: Einsum executed (guarded-chain retries / downgrades / demotions;
+    #: empty when every seam call succeeded on its primary backend)
+    downgrade_events: Dict[str, list] = field(default_factory=dict)
 
     def __getitem__(self, name: str) -> FTensor:
         return self.tensors[name]
@@ -228,6 +232,7 @@ class CascadeSimulator:
             name: self._to_ftensor(name, v) for name, v in inputs.items()}
         shapes = self._var_shapes(store, var_shapes)
         fallbacks: Dict[str, str] = {}
+        downgrades: Dict[str, list] = {}
 
         # consecutive independent Einsums (no member reads or rewrites
         # another member's output) batch into one execute_batch call;
@@ -247,10 +252,14 @@ class CascadeSimulator:
             paths = getattr(self.backend, "last_batch_paths", []) or []
             reasons = getattr(self.backend, "last_batch_fallbacks", []) \
                 or []
+            events = getattr(self.backend, "last_batch_downgrades", []) \
+                or []
             for i, (o_name, out_exec) in enumerate(zip(pending_out, outs)):
                 if i < len(paths) and paths[i] == "fallback":
                     fallbacks[o_name] = (reasons[i]
                                          if i < len(reasons) else "") or ""
+                if i < len(events) and events[i]:
+                    downgrades[o_name] = list(events[i])
                 declared_order = (self.spec.mapping.rank_order.get(o_name)
                                   or self.spec.einsum.declaration[o_name])
                 decl_shapes = {}
@@ -338,8 +347,10 @@ class CascadeSimulator:
                   if self.model is not None else None)
         if report is not None:
             report.fallback_reasons = dict(fallbacks)
+            report.downgrade_events = dict(downgrades)
         return SimResult(tensors=store, report=report,
-                         fallback_reasons=dict(fallbacks))
+                         fallback_reasons=dict(fallbacks),
+                         downgrade_events=dict(downgrades))
 
     # ------------------------------------------------------------------ #
     def run_iterative(self, inputs: Dict[str, Any],

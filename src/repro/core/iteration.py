@@ -648,6 +648,12 @@ class ExecutorBackend:
       * ``last_path`` / ``last_fallback_reason`` -- set after each
         ``execute`` when the backend transparently fell back to the
         oracle, so the run result can surface silent fallbacks;
+      * ``last_downgrades`` / ``last_batch_downgrades`` -- structured
+        ``DowngradeEvent`` lists (kernels/backends.py) drained after
+        each ``execute`` / ``execute_batch`` when the backend routes
+        seam calls through a guarded degradation chain; the generator
+        copies them onto ``SimResult.downgrade_events`` so no kernel
+        downgrade is ever silent;
       * ``prepare_inputs(plan, tensors, var_shapes) -> bool`` -- False
         lets the generator skip ``transform_all`` (analytic
         calibration-cache fast path);
@@ -684,13 +690,15 @@ class ExecutorBackend:
         to share work across the batch (``VectorBackend`` reuses its
         kernel dispatch and workspace buffers and records the per-
         request paths on ``last_batch_paths``)."""
-        outs, paths, reasons = [], [], []
+        outs, paths, reasons, events = [], [], [], []
         for req in requests:
             outs.append(self.execute(**req))
             paths.append(getattr(self, "last_path", None))
             reasons.append(getattr(self, "last_fallback_reason", None))
+            events.append(list(getattr(self, "last_downgrades", ()) or ()))
         self.last_batch_paths = paths
         self.last_batch_fallbacks = reasons
+        self.last_batch_downgrades = events
         return outs
 
 

@@ -66,6 +66,10 @@ class Report:
     #: executed through the Python oracle instead of its fast path
     #: (filled by the generator; empty for PythonBackend runs)
     fallback_reasons: Dict[str, str] = field(default_factory=dict)
+    #: einsum -> structured kernel-dispatch DowngradeEvents (guarded
+    #: chain retries / downgrades / demotions recorded during that
+    #: Einsum's execution; empty when all seams ran on their primary)
+    downgrade_events: Dict[str, list] = field(default_factory=dict)
 
     @property
     def dram_bytes(self) -> float:

@@ -18,6 +18,35 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from .einsum import Einsum, Semiring, parse_einsum
 
+
+class SpecError(ValueError):
+    """A malformed or inconsistent accelerator spec.
+
+    Carries the offending ``accelerator`` name, spec ``section``
+    (einsum / mapping / format / architecture / binding), ``field``
+    (the rank, tensor, component, or einsum the error anchors to) and,
+    for parse failures, the raw ``directive`` text -- so a zoo-wide
+    sweep reports *which* spec broke, not just that one did."""
+
+    def __init__(self, message: str, *,
+                 accelerator: Optional[str] = None,
+                 section: Optional[str] = None,
+                 field: Optional[str] = None,
+                 directive: Optional[str] = None):
+        self.accelerator = accelerator
+        self.section = section
+        self.field = field
+        self.directive = directive
+        ctx = [p for p in (accelerator, section, field) if p]
+        super().__init__(
+            f"[{'/'.join(ctx)}] {message}" if ctx else message)
+
+    def with_accelerator(self, name: str) -> "SpecError":
+        return SpecError(self.args[0].split("] ", 1)[-1],
+                         accelerator=name, section=self.section,
+                         field=self.field, directive=self.directive)
+
+
 # ---------------------------------------------------------------------- #
 # partitioning directives
 # ---------------------------------------------------------------------- #
@@ -54,10 +83,13 @@ _DIR_RE = re.compile(
     r"|(?P<flat>flatten\(\)))")
 
 
-def parse_directive(text: str) -> Directive:
+def parse_directive(text: str, *, field: Optional[str] = None,
+                    accelerator: Optional[str] = None) -> Directive:
     m = _DIR_RE.fullmatch(text.strip())
     if not m:
-        raise ValueError(f"bad partitioning directive: {text!r}")
+        raise SpecError(f"bad partitioning directive: {text!r}",
+                        accelerator=accelerator, section="mapping",
+                        field=field, directive=text)
     if m.group("flat"):
         return Flatten()
     if m.group("shape") is not None:
@@ -112,7 +144,10 @@ class EinsumSpec:
         for e in self.expressions:
             if e.output.tensor == out_name:
                 return e
-        raise KeyError(out_name)
+        raise SpecError(
+            f"no Einsum produces {out_name!r} "
+            f"(cascade outputs: {self.cascade_outputs})",
+            section="einsum", field=out_name)
 
 
 # ---------------------------------------------------------------------- #
@@ -212,9 +247,17 @@ class ArchSpec:
     clock_ghz: float = 1.0
 
     def find(self, topology: str, comp: str) -> Tuple[Component, int]:
-        r = self.topologies[topology].find(comp)
+        root = self.topologies.get(topology)
+        if root is None:
+            raise SpecError(
+                f"unknown topology {topology!r} "
+                f"(have: {sorted(self.topologies)})",
+                section="architecture", field=topology)
+        r = root.find(comp)
         if not r:
-            raise KeyError(f"component {comp} not in topology {topology}")
+            raise SpecError(
+                f"component {comp!r} not in topology {topology!r}",
+                section="architecture", field=comp)
         return r
 
 
@@ -284,13 +327,25 @@ def _parse_partitioning(d: Dict[str, Any]
             key2 = key
         else:
             key2 = key
-        out[key2] = [parse_directive(t) if isinstance(t, str) else t
+        out[key2] = [parse_directive(t, field=str(key))
+                     if isinstance(t, str) else t
                      for t in dirs]
     return out
 
 
 def load_spec(d: Dict[str, Any], name: str = "design") -> AcceleratorSpec:
-    """Build an AcceleratorSpec from a dict shaped like the paper's YAML."""
+    """Build an AcceleratorSpec from a dict shaped like the paper's
+    YAML.  Spec errors surface as :class:`SpecError` tagged with the
+    accelerator's name."""
+    try:
+        return _load_spec(d, name)
+    except SpecError as exc:
+        if exc.accelerator is None:
+            raise exc.with_accelerator(d.get("name", name)) from None
+        raise
+
+
+def _load_spec(d: Dict[str, Any], name: str) -> AcceleratorSpec:
     es = d["einsum"]
     einsum_spec = EinsumSpec(
         declaration={t: list(r) for t, r in es["declaration"].items()},

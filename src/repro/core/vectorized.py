@@ -45,6 +45,7 @@ import numpy as np
 from .csf import CSF, _from_sorted_points
 from .einsum import BinOp, Semiring, Take, TensorAccess
 from .fibertree import FTensor
+from .guards import check_conservation, check_finite
 from .iteration import ExecutorBackend, PythonBackend
 from .mapping import EinsumPlan
 from .trace import Instrumentation, NullInstr
@@ -347,6 +348,9 @@ class _RtUnion:
             c = _prefix_present(member, st.offs, np.maximum(y - 1, 0))
             pulls = np.where(d, nc,
                              np.where(some, np.minimum(c + 1, nc), 0))
+            # a union cannot pull more from a source than it yielded
+            check_conservation(int(nc.sum()), int(pulls.sum()),
+                               f"union:{rank}")
             dc = d | (some & (c >= nc))
             child.account(counts, rank, pulls, dc)
 
@@ -380,15 +384,23 @@ class VectorBackend(ExecutorBackend):
         self._oracle = PythonBackend()
         #: resolved kernel backend for the four seams: an instance, a
         #: registry name ('numpy' / 'jax-jit' / 'pallas-interpret' /
-        #: 'pallas-tpu'), or None -> $REPRO_KERNEL_BACKEND / auto
-        from repro.kernels.backends import resolve_kernel_backend
-        self.kernels = resolve_kernel_backend(kernel_backend)
+        #: 'pallas-tpu'), or None -> $REPRO_KERNEL_BACKEND / auto.
+        #: Always wrapped in the guarded degradation chain: a failing
+        #: backend downgrades per seam call (recorded as DowngradeEvents
+        #: on last_downgrades) instead of poisoning the run.
+        from repro.kernels.backends import resolve_guarded_kernels
+        self.kernels = resolve_guarded_kernels(kernel_backend)
         #: 'vector' or 'fallback' for the most recent execute() call
         self.last_path: Optional[str] = None
         #: why the most recent execute() fell back (None on the fast path)
         self.last_fallback_reason: Optional[str] = None
+        #: kernel-dispatch DowngradeEvents drained after the most recent
+        #: execute() (guarded chain retries / downgrades / demotions)
+        self.last_downgrades: List = []
         #: per-execution path of each request in the last execute_batch
         self.last_batch_paths: List[str] = []
+        #: per-execution downgrade events for the last execute_batch
+        self.last_batch_downgrades: List[List] = []
         self._ws = _Workspace()
         #: when True, per-stage wall time accumulates in stage_times
         #: ('materialize' / 'pair-merge' / 'lookup' / 'finalize' /
@@ -419,18 +431,44 @@ class VectorBackend(ExecutorBackend):
                                    out_initial=init_csf)
             self.last_path = "vector"
             self.last_fallback_reason = None
+            self.last_downgrades = self._drain_downgrades()
             return csf_out.to_ftensor()
-        except (_Unsupported, _CapacityExceeded) as exc:
-            if not self.fallback:
+        except Exception as exc:
+            if not (self.fallback and self._isolates(exc)):
+                self.last_downgrades = self._drain_downgrades()
                 raise
+            # the vector pipeline is poisoned for this Einsum only
+            # (inadmissible plan, exhausted kernel chain, violated
+            # runtime invariant): fall back to the interpreter oracle.
+            # _run emits instrumentation only on completion, so the
+            # oracle's counts are the run's counts -- parity preserved.
             self.last_path = "fallback"
-            self.last_fallback_reason = str(exc)
+            self.last_fallback_reason = f"{type(exc).__name__}: {exc}" \
+                if not isinstance(exc, (_Unsupported, _CapacityExceeded)) \
+                else str(exc)
+            self.last_downgrades = self._drain_downgrades()
             ften = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
                     for t, v in tensors.items()}
             return self._oracle.execute(
                 plan, ften, var_shapes, semiring=semiring, instr=instr,
                 out_initial=out_initial, isect_strategy=isect_strategy,
                 isect_leader=isect_leader)
+
+    @staticmethod
+    def _isolates(exc: BaseException) -> bool:
+        """Faults the oracle fallback absorbs: plan inadmissibility (the
+        historical pair), an exhausted kernel degradation chain, and
+        strict-mode guard violations.  Anything else (a genuine bug, a
+        bad input the oracle would also choke on) propagates."""
+        if isinstance(exc, (_Unsupported, _CapacityExceeded)):
+            return True
+        from repro.core.guards import GuardViolation
+        from repro.kernels.backends import KernelChainExhausted
+        return isinstance(exc, (KernelChainExhausted, GuardViolation))
+
+    def _drain_downgrades(self) -> List:
+        pop = getattr(self.kernels, "pop_events", None)
+        return pop() if pop is not None else []
 
     def execute_batch(self, requests) -> List[FTensor]:
         """Batched frontier execution across independent Einsums: the
@@ -443,13 +481,45 @@ class VectorBackend(ExecutorBackend):
         outs: List[FTensor] = []
         paths: List[str] = []
         reasons: List[Optional[str]] = []
+        downgrades: List[List] = []
         for req in requests:
-            outs.append(self.execute(**req))
-            paths.append(self.last_path or "vector")
-            reasons.append(self.last_fallback_reason)
+            try:
+                outs.append(self.execute(**req))
+                paths.append(self.last_path or "vector")
+                reasons.append(self.last_fallback_reason)
+            except Exception as exc:
+                # per-Einsum isolation: a fault that escaped execute()'s
+                # own fallback (or struck its oracle re-run) poisons
+                # this Einsum only -- the rest of the batch proceeds on
+                # the unaffected backend.  Never silent: the reason
+                # lands on the batch record exactly like a planned
+                # fallback, and the oracle replays instrumentation so
+                # count parity holds for the isolated Einsum too.
+                if not self.fallback:
+                    self.last_batch_paths = paths
+                    self.last_batch_fallbacks = reasons
+                    self.last_batch_downgrades = downgrades
+                    raise
+                outs.append(self._isolate_request(req, exc))
+                paths.append("fallback")
+                reasons.append(self.last_fallback_reason)
+            downgrades.append(list(self.last_downgrades))
         self.last_batch_paths = paths
         self.last_batch_fallbacks = reasons
+        self.last_batch_downgrades = downgrades
         return outs
+
+    def _isolate_request(self, req, exc: BaseException) -> FTensor:
+        """Oracle re-run of one poisoned batch request."""
+        self.last_path = "fallback"
+        self.last_fallback_reason = \
+            f"einsum-isolated {type(exc).__name__}: {exc}"
+        kw = dict(req)
+        tensors = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
+                   for t, v in kw.pop("tensors").items()}
+        plan = kw.pop("plan")
+        var_shapes = kw.pop("var_shapes")
+        return self._oracle.execute(plan, tensors, var_shapes, **kw)
 
     def execute_csf(self, plan, tensors, semiring=None, instr=None,
                     isect_strategy="two_finger",
@@ -560,6 +630,10 @@ class VectorBackend(ExecutorBackend):
         else:
             cols = [np.zeros((0, w), dtype=np.int64) for w in red.widths]
             vals = np.zeros(0, dtype=np.float64)
+        # arithmetic semirings promise finite leaf values (min-plus
+        # legitimately folds infinities, so the scan gates on add)
+        if vp.semiring.add_vec is np.add:
+            check_finite(vals, f"vector-out:{name}")
         # every reduced group is a distinct output point, so the CSF
         # build can skip the leaf boundary scan (leaf_unique)
         out_csf = _from_sorted_points(
@@ -787,6 +861,9 @@ class VectorBackend(ExecutorBackend):
                 dead |= self._lookup(lk, csf, nf, counts)
             if dead.any():
                 nf = nf.filter(~dead)
+        # stream conservation: a level cannot drain more frontier items
+        # than its streams yielded (filters only ever shrink)
+        check_conservation(n, nf.n, f"level:{vp.name}:{rank}")
         if self.profile:
             s1 = float(self.stage_times["pair-merge"]) \
                 + float(self.stage_times["lookup"])

@@ -51,7 +51,17 @@ from .trace import NullInstr
 
 
 class _Unsupported(Exception):
-    """Plan shape the vector path does not cover (-> fallback)."""
+    """Plan shape the vector path does not cover (-> fallback).
+
+    ``einsum`` (when known) names the output tensor whose plan failed
+    to lower, so batched runs and sweep errors can say *which* Einsum
+    forced the oracle rather than just why."""
+
+    def __init__(self, reason: str, einsum: Optional[str] = None):
+        self.reason = reason
+        self.einsum = einsum
+        super().__init__(
+            f"{einsum}: {reason}" if einsum else reason)
 
 
 # ---------------------------------------------------------------------- #
@@ -282,7 +292,22 @@ def lower(plan: EinsumPlan, var_shapes: Dict[str, int],
           semiring: Optional[Semiring] = None,
           out_initial=None, isect_strategy: str = "two_finger",
           isect_leader: Optional[str] = None) -> VectorPlan:
-    """EinsumPlan -> VectorPlan, or raise ``_Unsupported``."""
+    """EinsumPlan -> VectorPlan, or raise ``_Unsupported`` (tagged with
+    the Einsum's output name, so multi-Einsum runs report which plan
+    declined the vector path)."""
+    try:
+        return _lower(plan, var_shapes, semiring, out_initial,
+                      isect_strategy, isect_leader)
+    except _Unsupported as exc:
+        if exc.einsum is None:
+            raise _Unsupported(exc.reason, plan.output) from None
+        raise
+
+
+def _lower(plan: EinsumPlan, var_shapes: Dict[str, int],
+           semiring: Optional[Semiring] = None,
+           out_initial=None, isect_strategy: str = "two_finger",
+           isect_leader: Optional[str] = None) -> VectorPlan:
     semiring = semiring or Semiring.arithmetic()
     if not semiring.has_vector_forms:
         raise _Unsupported(

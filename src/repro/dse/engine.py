@@ -19,7 +19,10 @@ from __future__ import annotations
 
 import itertools
 import time
-from concurrent.futures import ThreadPoolExecutor
+import traceback as _tb
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
+from concurrent.futures import wait as _fut_wait
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -32,6 +35,25 @@ from .space import DesignPoint
 
 _token_counter = itertools.count()
 
+#: objective fields checkpointed per point (alphabetical: jax flattens
+#: dict pytrees in sorted-key order, so save and restore agree)
+_CKPT_FIELDS = ("dram_bytes", "energy_pj", "seconds", "wall_seconds")
+
+
+def _active_injector():
+    try:
+        from repro.testing.faults import active_injector
+    except ImportError:
+        return None
+    return active_injector()
+
+
+def _trim_traceback(exc: BaseException, limit: int = 600) -> str:
+    """The exception line plus the innermost two frames -- enough to
+    locate a sweep failure without shipping whole tracebacks around."""
+    lines = _tb.format_exception(type(exc), exc, exc.__traceback__)
+    return "".join(lines[:1] + lines[-3:])[-limit:]
+
 
 @dataclass
 class PointResult:
@@ -43,11 +65,28 @@ class PointResult:
     wall_seconds: float = 0.0
     fallback_reasons: Dict[str, str] = field(default_factory=dict)
     report: Optional[Report] = None
+    #: "ExcType: message" on failure (None when the point evaluated)
     error: Optional[str] = None
+    #: the exception class name alone (machine-matchable)
+    error_type: Optional[str] = None
+    #: trimmed traceback (exception line + innermost frames)
+    traceback: Optional[str] = None
+    #: the point exceeded the engine's per-point wall-clock budget
+    timed_out: bool = False
+    #: evaluation attempts consumed (> 1 after retries)
+    attempts: int = 1
+    #: objectives restored from a sweep checkpoint, not re-evaluated
+    restored: bool = False
 
     @property
     def ok(self) -> bool:
         return self.error is None
+
+    @property
+    def status(self) -> str:
+        if self.ok:
+            return "restored" if self.restored else "ok"
+        return "timeout" if self.timed_out else "failed"
 
     @property
     def label(self) -> str:
@@ -55,7 +94,10 @@ class PointResult:
 
     def row(self) -> str:
         if not self.ok:
-            return f"{self.label}: FAILED ({self.error})"
+            tag = "TIMEOUT" if self.timed_out else "FAILED"
+            tries = f" attempts={self.attempts}" if self.attempts > 1 \
+                else ""
+            return f"{self.label}: {tag} ({self.error}){tries}"
         return (f"{self.label}: time={self.seconds:.3e}s "
                 f"traffic={self.dram_bytes / 1e3:.1f}KB "
                 f"energy={self.energy_pj / 1e6:.2f}uJ")
@@ -69,13 +111,22 @@ class SweepEngine:
                  backend: str = "analytic",
                  mode: str = "calibrated",
                  keep_reports: bool = False,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 point_timeout_s: Optional[float] = None,
+                 point_retries: int = 0,
+                 retry_backoff_s: float = 0.0):
         self.inputs = dict(inputs)
         self.var_shapes = dict(var_shapes)
         self.backend = backend
         self.mode = mode
         self.keep_reports = keep_reports
         self.max_workers = max_workers
+        #: per-point wall-clock budget; a point past it is recorded as
+        #: timed out and the sweep proceeds (None = unbounded)
+        self.point_timeout_s = point_timeout_s
+        #: bounded re-evaluations of a failed / timed-out point
+        self.point_retries = point_retries
+        self.retry_backoff_s = retry_backoff_s
         # shared caches (see module docstring)
         self._plan_cache: Dict[str, Dict[str, EinsumPlan]] = {}
         self._calib_cache: Dict[Tuple, Any] = {}
@@ -83,6 +134,8 @@ class SweepEngine:
         # simple stats for tests / benchmarks
         self.plan_cache_hits = 0
         self.points_evaluated = 0
+        #: coverage tallies of the most recent sweep() call
+        self.last_coverage: Dict[str, int] = {}
 
     # ------------------------------------------------------------------ #
     def _backend_for(self, token: str):
@@ -96,8 +149,50 @@ class SweepEngine:
                                cache_token=token)
 
     def evaluate(self, point: DesignPoint) -> PointResult:
+        """Evaluate one point with the engine's fault policy: per-point
+        wall-clock timeout, then up to ``point_retries`` bounded
+        re-attempts with backoff.  Never raises for a point failure --
+        the error lands structured on the result (class name, message,
+        trimmed traceback).  ``SimulatedCrash`` (a BaseException) is
+        deliberately not absorbed: it models the whole process dying."""
+        attempts = 0
+        while True:
+            attempts += 1
+            res = self._evaluate_attempt(point)
+            res.attempts = attempts
+            if res.ok or attempts > self.point_retries:
+                return res
+            if self.retry_backoff_s > 0.0:
+                time.sleep(min(self.retry_backoff_s * (2 ** (attempts - 1)),
+                               5.0))
+
+    def _evaluate_attempt(self, point: DesignPoint) -> PointResult:
+        if self.point_timeout_s is None:
+            return self._evaluate_once(point)
+        # a disposable single-use worker so one pathological point
+        # cannot stall the sweep; on timeout the worker thread is
+        # abandoned (daemonic futures cannot be killed) and the point
+        # is recorded as timed out
+        ex = ThreadPoolExecutor(max_workers=1)
+        fut: Future = ex.submit(self._evaluate_once, point)
+        try:
+            return fut.result(timeout=self.point_timeout_s)
+        except _FutTimeout:
+            fut.cancel()
+            return PointResult(
+                point=point, wall_seconds=self.point_timeout_s,
+                error=f"TimeoutError: point exceeded "
+                      f"{self.point_timeout_s}s wall-clock budget",
+                error_type="TimeoutError", timed_out=True)
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+
+    def _evaluate_once(self, point: DesignPoint) -> PointResult:
         t0 = time.perf_counter()
         try:
+            inj = _active_injector()
+            if inj is not None:
+                inj.before_point(point.label)
             spec = point.build_spec()
             params = point.default_params()
             sig = mapping_signature(spec, params)
@@ -124,24 +219,119 @@ class SweepEngine:
         except Exception as exc:                      # noqa: BLE001
             return PointResult(point=point,
                                wall_seconds=time.perf_counter() - t0,
-                               error=f"{type(exc).__name__}: {exc}")
+                               error=f"{type(exc).__name__}: {exc}",
+                               error_type=type(exc).__name__,
+                               traceback=_trim_traceback(exc))
 
     # ------------------------------------------------------------------ #
     def sweep(self, points: Sequence[DesignPoint],
-              warm: bool = True) -> List[PointResult]:
+              warm: bool = True,
+              checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 16,
+              resume: bool = False) -> List[PointResult]:
         """Evaluate every point, preserving input order.
 
         With ``max_workers > 1`` evaluation is threaded; the first
         point is evaluated up front (``warm``) so the shared plan /
-        calibration caches are populated before the fan-out."""
+        calibration caches are populated before the fan-out.
+
+        With ``checkpoint_dir`` the sweep saves its completed results
+        (objectives + structured errors) atomically every
+        ``checkpoint_every`` completions and once at the end -- on an
+        interruption (including a :class:`SimulatedCrash`) a final
+        best-effort save still runs, so ``resume=True`` on a later
+        call restores every checkpointed point by label instead of
+        re-evaluating it.  A point never finishes silently in neither
+        state: it is either in the results or still pending.
+
+        Coverage tallies of the call land on ``self.last_coverage``
+        (total / evaluated / ok / failed / timed_out / skipped, where
+        skipped counts checkpoint-restored points)."""
         points = list(points)
+        self.last_coverage = {}
         if not points:
             return []
-        workers = self.max_workers or 1
-        if workers <= 1 or len(points) == 1:
-            return [self.evaluate(p) for p in points]
-        head = [self.evaluate(points[0])] if warm else []
-        rest = points[1:] if warm else points
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            tail = list(pool.map(self.evaluate, rest))
-        return head + tail
+
+        done: Dict[str, PointResult] = {}
+        store = None
+        saved_count = 0
+        if checkpoint_dir is not None:
+            from repro.dse.sweep_ckpt import SweepCheckpointStore
+            store = SweepCheckpointStore(checkpoint_dir)
+            if resume:
+                for r in store.load(points):
+                    done[r.label] = r
+                saved_count = len(done)
+
+        todo = [p for p in points if p.label not in done]
+
+        def maybe_save(final: bool = False) -> None:
+            nonlocal saved_count
+            if store is None:
+                return
+            if final or (len(done) - saved_count) >= checkpoint_every:
+                store.save(list(done.values()), n_total=len(points))
+                saved_count = len(done)
+
+        try:
+            workers = self.max_workers or 1
+            if workers <= 1 or len(todo) <= 1:
+                for p in todo:
+                    done[p.label] = self.evaluate(p)
+                    maybe_save()
+            else:
+                head = todo[:1] if warm else []
+                for p in head:
+                    done[p.label] = self.evaluate(p)
+                    maybe_save()
+                rest = todo[1:] if warm else todo
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    futs = {pool.submit(self.evaluate, p): p
+                            for p in rest}
+                    pending = set(futs)
+                    while pending:
+                        finished, pending = _fut_wait(
+                            pending, return_when=FIRST_COMPLETED)
+                        for f in finished:
+                            done[futs[f].label] = f.result()
+                        maybe_save()
+        except BaseException:
+            # a crash mid-sweep (SimulatedCrash, KeyboardInterrupt)
+            # still publishes what completed, so --resume works
+            maybe_save(final=True)
+            raise
+        maybe_save(final=True)
+
+        results = [done[p.label] for p in points]
+        self.last_coverage = self.coverage(results)
+        return results
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def coverage(results: Sequence[PointResult]) -> Dict[str, int]:
+        """Tally results by outcome (``skipped`` = restored from a
+        checkpoint rather than re-evaluated)."""
+        cov = {"total": len(results), "evaluated": 0, "ok": 0,
+               "failed": 0, "timed_out": 0, "skipped": 0}
+        for r in results:
+            if r.restored:
+                cov["skipped"] += 1
+            else:
+                cov["evaluated"] += 1
+            if r.ok:
+                cov["ok"] += 1
+            elif r.timed_out:
+                cov["timed_out"] += 1
+            else:
+                cov["failed"] += 1
+        return cov
+
+    @staticmethod
+    def summarize(results: Sequence[PointResult]) -> str:
+        """One-line sweep coverage summary for logs / CLI output."""
+        cov = SweepEngine.coverage(results)
+        return (f"{cov['ok']}/{cov['total']} ok "
+                f"({cov['evaluated']} evaluated, "
+                f"{cov['skipped']} restored, "
+                f"{cov['failed']} failed, "
+                f"{cov['timed_out']} timed out)")

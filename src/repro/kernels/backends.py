@@ -35,7 +35,10 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import List, Optional, Tuple
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -459,6 +462,28 @@ def _make(name: str):
         f"or 'auto'")
 
 
+#: why the last ``auto`` probe fell back to numpy (None when it found a
+#: TPU or has not run); surfaced instead of silently swallowed
+AUTO_PROBE_ERROR: Optional[str] = None
+
+
+def _probe_tpu() -> bool:
+    """Is a TPU jax backend available?  Failures are narrowed to the
+    ways a probe can actually fail -- jax missing (ImportError), plugin
+    / runtime initialization broken (RuntimeError), device files
+    unreadable (OSError) -- and the reason is recorded on
+    ``AUTO_PROBE_ERROR`` rather than discarded."""
+    global AUTO_PROBE_ERROR
+    try:
+        import jax
+        on_tpu = jax.default_backend() == "tpu"
+    except (ImportError, RuntimeError, OSError) as exc:
+        AUTO_PROBE_ERROR = f"{type(exc).__name__}: {exc}"
+        return False
+    AUTO_PROBE_ERROR = None
+    return on_tpu
+
+
 def resolve_kernel_backend(which=None):
     """Resolve a kernel backend: an instance passes through, a name hits
     the registry, ``None`` consults ``$REPRO_KERNEL_BACKEND`` then
@@ -467,13 +492,416 @@ def resolve_kernel_backend(which=None):
         return which
     name = which or os.environ.get(ENV_VAR) or "auto"
     if name == "auto":
-        try:
-            import jax
-            on_tpu = jax.default_backend() == "tpu"
-        except Exception:
-            on_tpu = False
-        name = "pallas-tpu" if on_tpu else "numpy"
+        name = "pallas-tpu" if _probe_tpu() else "numpy"
     inst = _INSTANCES.get(name)
     if inst is None:
         inst = _INSTANCES[name] = _make(name)
     return inst
+
+
+# ---------------------------------------------------------------------- #
+# guarded dispatch: the per-seam degradation chain
+# ---------------------------------------------------------------------- #
+#: degradation order -- each seam call starts at its primary backend's
+#: position in this chain and walks right until one lowering succeeds
+DEGRADATION_CHAIN = ("pallas-tpu", "pallas-interpret", "jax-jit", "numpy")
+
+#: the five seam methods the guard mediates
+GUARDED_SEAMS = ("intersect_keys", "union_keys", "union_k_keys",
+                 "lookup_keys", "segmented_reduce")
+
+#: substrings of backend error text classified transient (worth a
+#: bounded retry on the *same* backend before downgrading)
+TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "DEADLINE_EXCEEDED",
+                     "UNAVAILABLE", "ABORTED")
+
+
+@dataclass(frozen=True)
+class DowngradeEvent:
+    """One structured record of the guard acting on a seam fault.
+
+    ``action`` is one of:
+
+    * ``retry``       a transient fault; the same seam x backend pair is
+                      retried after backoff,
+    * ``downgrade``   the seam call moved to ``fallback`` (the next
+                      backend in the chain),
+    * ``demote``      the seam x backend pair crossed the failure
+                      threshold and is skipped for the rest of the
+                      process,
+    * ``unavailable`` the backend could not even be constructed (e.g.
+                      pallas-tpu on a CPU host).
+
+    Every caught seam fault produces at least one event -- the guard
+    never swallows silently."""
+    seam: str
+    backend: str
+    fallback: str            # next backend tried ("" for retry/demote)
+    action: str              # retry | downgrade | demote | unavailable
+    reason: str
+    exc_type: str
+    attempts: int = 1
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"seam": self.seam, "backend": self.backend,
+                "fallback": self.fallback, "action": self.action,
+                "reason": self.reason, "exc_type": self.exc_type,
+                "attempts": self.attempts}
+
+
+class KernelChainExhausted(RuntimeError):
+    """Every backend in the degradation chain failed for a seam call.
+    ``VectorBackend`` treats this like any other execution fault: the
+    affected Einsum falls back to the interpreter oracle."""
+
+
+class SeamPostconditionError(RuntimeError):
+    """A seam lowering returned an output violating the seam's
+    contract (wrong length, out-of-range positions, unsorted union,
+    non-finite reduction under an arithmetic semiring)."""
+
+
+# process-wide guard state: demotions are permanent for the process (a
+# backend that failed N times is not coming back), and the event
+# counter is what chaos runs compare against injected-fault counts
+_GUARD_LOCK = threading.Lock()
+_DEMOTED: Set[Tuple[str, str]] = set()
+_FAIL_COUNTS: Dict[Tuple[str, str], int] = {}
+_EVENTS_RECORDED = 0
+
+
+def events_recorded() -> int:
+    """Total DowngradeEvents recorded process-wide (chaos accounting:
+    must cover every injected seam fault, else the run was silent)."""
+    return _EVENTS_RECORDED
+
+
+def reset_guard_state() -> None:
+    """Test hook: forget demotions, failure tallies and the event
+    counter."""
+    global _EVENTS_RECORDED
+    with _GUARD_LOCK:
+        _DEMOTED.clear()
+        _FAIL_COUNTS.clear()
+        _EVENTS_RECORDED = 0
+
+
+def _is_transient(exc: BaseException) -> bool:
+    if type(exc).__name__ == "InjectedTransientFault":
+        return True
+    msg = str(exc)
+    return any(tok in msg for tok in TRANSIENT_MARKERS)
+
+
+# lazily-resolved cross-module hooks, cached after the first call:
+# these run on every guarded seam call, so repeated import-machinery
+# lookups would tax the hot path
+_INJECTOR_FN = None
+_GUARDS_ENABLED_FN = None
+
+
+def _active_injector():
+    global _INJECTOR_FN
+    if _INJECTOR_FN is None:
+        try:
+            from repro.testing.faults import active_injector
+        except ImportError:              # pragma: no cover - stripped
+            _INJECTOR_FN = lambda: None  # noqa: E731
+        else:
+            _INJECTOR_FN = active_injector
+    return _INJECTOR_FN()
+
+
+def _guards_enabled() -> bool:
+    # lazy: repro.core imports this module transitively at package
+    # import time, so the reverse edge must resolve at call time only
+    global _GUARDS_ENABLED_FN
+    if _GUARDS_ENABLED_FN is None:
+        from repro.core import guards
+        _GUARDS_ENABLED_FN = guards.enabled
+    return _GUARDS_ENABLED_FN()
+
+
+def _postcheck(seam: str, args, kwargs, out) -> None:
+    """Cheap seam-contract postconditions (O(n) vectorized compares).
+    A violation is *actionable* here -- the caller downgrades to the
+    next backend -- unlike the warn-or-raise guards in core.guards."""
+    if seam == "intersect_keys":
+        a, b = args[0], args[1]
+        arr = np.asarray(out)
+        if len(arr) != len(a):
+            raise SeamPostconditionError(
+                f"intersect_keys returned {len(arr)} positions for "
+                f"{len(a)} keys")
+        if len(arr) and (int(arr.max()) >= len(b) or int(arr.min()) < -1):
+            raise SeamPostconditionError(
+                "intersect_keys position out of range")
+    elif seam == "lookup_keys":
+        hay, probes = args[0], args[1]
+        arr = np.asarray(out)
+        if len(arr) != len(probes):
+            raise SeamPostconditionError(
+                f"lookup_keys returned {len(arr)} positions for "
+                f"{len(probes)} probes")
+        if len(arr) and (int(arr.max()) >= len(hay) or int(arr.min()) < -1):
+            raise SeamPostconditionError("lookup_keys position out of range")
+    elif seam == "union_keys":
+        u, pa, pb = out
+        u = np.asarray(u)
+        if len(u) > 1 and bool((np.diff(u) <= 0).any()):
+            raise SeamPostconditionError("union_keys output not "
+                                         "strictly sorted")
+        if len(pa) != len(u) or len(pb) != len(u):
+            raise SeamPostconditionError("union_keys position length "
+                                         "mismatch")
+    elif seam == "union_k_keys":
+        u, pos_list = out
+        u = np.asarray(u)
+        if len(u) > 1 and bool((np.diff(u) <= 0).any()):
+            raise SeamPostconditionError("union_k_keys output not "
+                                         "strictly sorted")
+        if any(len(p) != len(u) for p in pos_list):
+            raise SeamPostconditionError("union_k_keys position length "
+                                         "mismatch")
+    elif seam == "segmented_reduce":
+        starts = args[1]
+        arr = np.asarray(out)
+        if len(arr) != len(starts):
+            raise SeamPostconditionError(
+                f"segmented_reduce returned {len(arr)} groups for "
+                f"{len(starts)} starts")
+        semiring = kwargs.get("semiring",
+                              args[2] if len(args) > 2 else None)
+        arithmetic = semiring is None or semiring.add_vec is np.add
+        if arr.dtype.kind == "f" and len(arr):
+            with np.errstate(invalid="ignore"):
+                if arithmetic:
+                    # inf is as illegal as NaN under plain addition
+                    bad = not bool(np.isfinite(arr).all())
+                else:
+                    # tropical semirings use inf legitimately (the
+                    # additive identity of min-plus) -- but NaN never is
+                    bad = bool(np.isnan(arr).any())
+            if bad:
+                raise SeamPostconditionError(
+                    "segmented_reduce produced "
+                    + ("non-finite values under an arithmetic semiring"
+                       if arithmetic else "NaN values"))
+
+
+class GuardedKernels:
+    """Degradation-chain wrapper around the kernel-backend registry.
+
+    Exposes the same five seam methods as the raw backends; each call
+    walks the chain from the primary backend rightwards until a
+    lowering succeeds, with
+
+    * transient faults retried on the same backend with capped
+      exponential backoff (``max_retries`` / ``backoff_base`` /
+      ``backoff_cap``; ``sleep`` is injectable for tests),
+    * permanent faults downgrading to the next backend,
+    * a seam x backend pair demoted for the rest of the process after
+      ``demote_after`` permanent failures,
+    * seam postconditions (when ``REPRO_GUARDS`` != off) converting a
+      *corrupted* output into a downgrade as well,
+    * every action recorded as a :class:`DowngradeEvent` -- drained by
+      the executor via :meth:`pop_events` onto ``SimResult.report``.
+
+    The terminal numpy lowering has no further fallback: if it fails
+    too, :class:`KernelChainExhausted` propagates to the executor,
+    whose per-Einsum isolation falls back to the interpreter oracle."""
+
+    def __init__(self, primary: str = "numpy", *,
+                 max_retries: int = 2, backoff_base: float = 0.05,
+                 backoff_cap: float = 1.0, demote_after: int = 3,
+                 sleep=time.sleep):
+        if isinstance(primary, str):
+            if primary not in KERNEL_BACKENDS:
+                raise ValueError(
+                    f"unknown kernel backend {primary!r}; choose from "
+                    f"{KERNEL_BACKENDS}")
+            start = DEGRADATION_CHAIN.index(primary)
+            self._chain: Tuple = DEGRADATION_CHAIN[start:]
+            self.name = primary
+        else:
+            # a raw backend instance: guard it with the numpy oracle as
+            # the only fallback
+            self._chain = (primary, "numpy")
+            self.name = getattr(primary, "name", type(primary).__name__)
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.demote_after = demote_after
+        self._sleep = sleep
+        self._unavailable: Dict[str, str] = {}
+        self._events: List[DowngradeEvent] = []
+        self._lock = threading.Lock()
+        # hot-path precomputation: (entry, name) pairs so _call does
+        # not re-derive names per seam call, and a per-wrapper instance
+        # cache so resolved entries skip the registry dict walk
+        self._chain_info: Tuple = tuple(
+            (e, e if isinstance(e, str)
+             else getattr(e, "name", type(e).__name__))
+            for e in self._chain)
+        self._inst_cache: Dict[str, object] = {}
+
+    # -------------------------------------------------------------- #
+    @property
+    def chain_names(self) -> Tuple[str, ...]:
+        return tuple(b if isinstance(b, str)
+                     else getattr(b, "name", type(b).__name__)
+                     for b in self._chain)
+
+    def pop_events(self) -> List[DowngradeEvent]:
+        """Drain the events recorded since the last drain."""
+        with self._lock:
+            out, self._events = self._events, []
+        return out
+
+    def _record(self, ev: DowngradeEvent) -> None:
+        global _EVENTS_RECORDED
+        with self._lock:
+            self._events.append(ev)
+        with _GUARD_LOCK:
+            _EVENTS_RECORDED += 1
+
+    # -------------------------------------------------------------- #
+    def _instantiate(self, entry, seam: str):
+        """The backend instance for a chain entry, or None (recorded as
+        unavailable) when it cannot be constructed."""
+        if not isinstance(entry, str):
+            return entry
+        key = entry
+        if key in self._unavailable:
+            return None
+        inst = _INSTANCES.get(key)
+        if inst is None:
+            try:
+                inst = _INSTANCES[key] = _make(key)
+            except (ImportError, RuntimeError, OSError, ValueError) as exc:
+                reason = f"{type(exc).__name__}: {exc}"
+                self._unavailable[key] = reason
+                self._record(DowngradeEvent(
+                    seam=seam, backend=key,
+                    fallback=self._next_name(key),
+                    action="unavailable", reason=str(exc),
+                    exc_type=type(exc).__name__))
+                return None
+        return inst
+
+    def _next_name(self, after) -> str:
+        names = self.chain_names
+        key = after if isinstance(after, str) else getattr(
+            after, "name", type(after).__name__)
+        try:
+            i = names.index(key)
+        except ValueError:
+            return ""
+        return names[i + 1] if i + 1 < len(names) else ""
+
+    # -------------------------------------------------------------- #
+    def _call(self, seam: str, *args, **kwargs):
+        inj = _active_injector()
+        check = _guards_enabled()
+        last_exc: Optional[BaseException] = None
+        for entry, bname in self._chain_info:
+            # lock-free read: set membership is atomic under the GIL
+            # and demotions only ever grow the set (writes take the
+            # lock in _note_failure)
+            if (seam, bname) in _DEMOTED:
+                continue
+            backend = self._inst_cache.get(bname)
+            if backend is None:
+                backend = self._instantiate(entry, seam)
+                if backend is None:
+                    continue
+                self._inst_cache[bname] = backend
+            attempts = 0
+            while True:
+                attempts += 1
+                try:
+                    if inj is not None:
+                        inj.before_seam(seam, bname)
+                    out = getattr(backend, seam)(*args, **kwargs)
+                    if inj is not None:
+                        out = inj.after_seam(seam, bname, out)
+                    if check:
+                        _postcheck(seam, args, kwargs, out)
+                    return out
+                except Exception as exc:
+                    last_exc = exc
+                    if _is_transient(exc) and attempts <= self.max_retries:
+                        self._record(DowngradeEvent(
+                            seam=seam, backend=bname, fallback="",
+                            action="retry", reason=str(exc),
+                            exc_type=type(exc).__name__,
+                            attempts=attempts))
+                        self._sleep(min(
+                            self.backoff_base * (2 ** (attempts - 1)),
+                            self.backoff_cap))
+                        continue
+                    self._note_failure(seam, bname, exc, attempts)
+                    break
+        raise KernelChainExhausted(
+            f"all kernel backends failed for seam {seam!r} "
+            f"(chain {self.chain_names}); last error: "
+            f"{type(last_exc).__name__ if last_exc else '?'}: "
+            f"{last_exc}") from last_exc
+
+    def _note_failure(self, seam: str, bname: str,
+                      exc: BaseException, attempts: int) -> None:
+        fallback = self._next_name(bname)
+        self._record(DowngradeEvent(
+            seam=seam, backend=bname, fallback=fallback,
+            action="downgrade", reason=str(exc),
+            exc_type=type(exc).__name__, attempts=attempts))
+        with _GUARD_LOCK:
+            key = (seam, bname)
+            _FAIL_COUNTS[key] = _FAIL_COUNTS.get(key, 0) + 1
+            demote = (_FAIL_COUNTS[key] >= self.demote_after
+                      and key not in _DEMOTED)
+            if demote:
+                _DEMOTED.add(key)
+        if demote:
+            self._record(DowngradeEvent(
+                seam=seam, backend=bname, fallback=fallback,
+                action="demote",
+                reason=f"{_FAIL_COUNTS[key]} failures "
+                       f"(threshold {self.demote_after})",
+                exc_type=type(exc).__name__, attempts=attempts))
+
+    # -------------------------------------------------------------- #
+    # the seam surface (mirrors NumpyKernels)
+    # -------------------------------------------------------------- #
+    def intersect_keys(self, a, b):
+        return self._call("intersect_keys", a, b)
+
+    def union_keys(self, a, b):
+        return self._call("union_keys", a, b)
+
+    def union_k_keys(self, arrays):
+        return self._call("union_k_keys", arrays)
+
+    def lookup_keys(self, hay, probes):
+        return self._call("lookup_keys", hay, probes)
+
+    def segmented_reduce(self, vals, starts, semiring=None,
+                         group_ids=None):
+        return self._call("segmented_reduce", vals, starts,
+                          semiring=semiring, group_ids=group_ids)
+
+
+def resolve_guarded_kernels(which=None, **opts) -> GuardedKernels:
+    """Like :func:`resolve_kernel_backend` but returns the backend
+    wrapped in the degradation chain.  Unlike the raw resolver this
+    never raises for an unavailable primary (``pallas-tpu`` on a CPU
+    host degrades at the first seam call instead): resolution is by
+    *name*, instantiation is lazy and guarded."""
+    if isinstance(which, GuardedKernels):
+        return which
+    if which is not None and not isinstance(which, str):
+        return GuardedKernels(which, **opts)
+    name = which or os.environ.get(ENV_VAR) or "auto"
+    if name == "auto":
+        name = "pallas-tpu" if _probe_tpu() else "numpy"
+    return GuardedKernels(name, **opts)

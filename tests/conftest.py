@@ -24,3 +24,14 @@ def sparse_matrix(rng, m, n, density=0.1):
 @pytest.fixture
 def spmat():
     return sparse_matrix
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Chaos-run gate: when a suite runs under ``$REPRO_FAULTS``, every
+    seam fault the injector fired must be covered by a recorded
+    DowngradeEvent.  A shortfall is a *silent* downgrade and fails the
+    session even if every individual test passed."""
+    if not os.environ.get("REPRO_FAULTS"):
+        return
+    from repro.testing.faults import verify_no_silent_downgrades
+    verify_no_silent_downgrades()

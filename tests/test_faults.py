@@ -1,0 +1,564 @@
+"""The resilient execution layer, provoked: deterministic fault
+injection across every degradation path.
+
+Three layers under test, bottom-up:
+
+  * guarded kernel dispatch (``kernels/backends.py``) -- injected seam
+    faults on a backend must downgrade along the chain with every
+    action recorded as a ``DowngradeEvent``, transients retried with
+    capped backoff, repeat offenders demoted for the process;
+  * execution guard-rails (``core/vectorized.py``) -- chain exhaustion
+    or a guard violation on one Einsum falls back to the interpreter
+    oracle for that Einsum only, bit-exact;
+  * sweep fault-tolerance (``dse/engine.py``) -- failing points land
+    structured on ``PointResult``, timeouts are bounded, a mid-sweep
+    crash leaves a checkpoint whose resumed Pareto front is
+    bit-identical to an uninterrupted run.
+
+Everything is deterministic: a failing configuration replays exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.accelerators import extensor, gamma, matraptor, outerspace, sigma
+from repro.core.generator import CascadeSimulator
+from repro.core.trace import CollectingInstr
+from repro.core.vectorized import VectorBackend
+from repro.kernels import backends as kbk
+from repro.testing.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                  SimulatedCrash, clear_injector,
+                                  install_injector, parse_faults,
+                                  verify_no_silent_downgrades)
+
+COUNTERS = ("touch_counts", "iter_counts", "compute_counts",
+            "isect_steps", "isect_matches", "advances")
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate(monkeypatch):
+    """Every test starts with no injector, no demotions, no events and
+    guards at the default level."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    monkeypatch.delenv("REPRO_GUARDS", raising=False)
+    clear_injector()
+    kbk.reset_guard_state()
+    yield
+    clear_injector()
+    kbk.reset_guard_state()
+
+
+def _spmm(rng, n=24, d=0.25):
+    a = rng.random((n, n)) * (rng.random((n, n)) < d)
+    b = rng.random((n, n)) * (rng.random((n, n)) < d)
+    return {"A": a, "B": b}, {"m": n, "k": n, "n": n}
+
+
+# ---------------------------------------------------------------------- #
+# fault-spec semantics
+# ---------------------------------------------------------------------- #
+def test_parse_faults_roundtrip():
+    specs = parse_faults(
+        "seam=intersect_keys,backend=jax-jit,kind=raise,at=2,times=3;"
+        "seam=*,kind=nan,every=5;kind=point-delay,delay_s=0.25,point=gamma")
+    assert [s.kind for s in specs] == ["raise", "nan", "point-delay"]
+    assert specs[0].seam == "intersect_keys"
+    assert specs[0].backend == "jax-jit"
+    assert (specs[0].at, specs[0].times) == (2, 3)
+    assert specs[1].every == 5
+    assert specs[2].delay_s == 0.25 and specs[2].point == "gamma"
+    with pytest.raises(ValueError):
+        parse_faults("kind=raise,bogus=1")
+    with pytest.raises(ValueError):
+        parse_faults("kind=no-such-kind")
+
+
+def test_fault_firing_is_deterministic():
+    sp = FaultSpec(kind="raise", at=2, times=2)
+    rng = np.random.default_rng(0)
+    fired = [sp._should_fire(rng) for _ in range(6)]
+    assert fired == [False, True, True, False, False, False]
+    sp = FaultSpec(kind="raise", at=1, every=3)
+    fired = [sp._should_fire(rng) for _ in range(7)]
+    assert fired == [True, False, False, True, False, False, True]
+
+
+def test_seeded_probabilistic_faults_replay():
+    def fire_seq(seed):
+        inj = FaultInjector([FaultSpec(kind="raise", p=0.5)], seed=seed)
+        out = []
+        for _ in range(20):
+            try:
+                inj.before_seam("intersect_keys", "numpy")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+    assert fire_seq(7) == fire_seq(7)
+    assert fire_seq(7) != fire_seq(8)
+
+
+def test_env_var_installs_injector(monkeypatch):
+    from repro.testing.faults import active_injector
+    monkeypatch.setenv("REPRO_FAULTS",
+                       "seam=lookup_keys,kind=raise,at=1")
+    inj = active_injector()
+    assert inj is not None
+    assert inj.specs[0].seam == "lookup_keys"
+    # explicit install wins over the env var
+    mine = install_injector(FaultInjector([]))
+    assert active_injector() is mine
+
+
+# ---------------------------------------------------------------------- #
+# guarded dispatch: downgrade / retry / demote mechanics
+# ---------------------------------------------------------------------- #
+def test_downgrade_records_event_and_result_is_correct():
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="intersect_keys",
+                   backend="jax-jit", at=1)]))
+    gk = kbk.GuardedKernels("jax-jit", sleep=lambda s: None)
+    a = np.array([1, 3, 5, 9], dtype=np.int64)
+    b = np.array([3, 4, 9], dtype=np.int64)
+    out = gk.intersect_keys(a, b)          # positions of a's keys in b
+    assert np.array_equal(out, [-1, 0, -1, 2])
+    evs = gk.pop_events()
+    assert [e.action for e in evs] == ["downgrade"]
+    assert evs[0].seam == "intersect_keys"
+    assert evs[0].backend == "jax-jit"
+    assert evs[0].fallback == "numpy"
+    assert evs[0].exc_type == "InjectedFault"
+    assert kbk.events_recorded() == 1
+    # the next call (no fault) stays on the primary: no new events
+    assert np.array_equal(gk.intersect_keys(a, b), [-1, 0, -1, 2])
+    assert gk.pop_events() == []
+
+
+def test_transient_retry_backoff_sequence():
+    """A transient fault is retried on the SAME backend with capped
+    exponential backoff, then succeeds -- recorded as retry events,
+    not a downgrade."""
+    install_injector(FaultInjector(
+        [FaultSpec(kind="transient", seam="lookup_keys",
+                   backend="jax-jit", at=1, times=2)]))
+    naps = []
+    gk = kbk.GuardedKernels("jax-jit", max_retries=2, backoff_base=0.05,
+                            backoff_cap=1.0, sleep=naps.append)
+    hay = np.array([2, 4, 8], dtype=np.int64)
+    out = gk.lookup_keys(hay, np.array([4, 8], dtype=np.int64))
+    assert np.array_equal(out, [1, 2])
+    assert naps == [0.05, 0.1]                      # base * 2^(n-1)
+    evs = gk.pop_events()
+    assert [e.action for e in evs] == ["retry", "retry"]
+    assert [e.attempts for e in evs] == [1, 2]
+    assert all(e.backend == "jax-jit" and e.fallback == "" for e in evs)
+
+
+def test_transient_exhausts_retries_then_downgrades():
+    install_injector(FaultInjector(
+        [FaultSpec(kind="transient", seam="lookup_keys",
+                   backend="jax-jit", at=1, times=99)]))
+    gk = kbk.GuardedKernels("jax-jit", max_retries=2,
+                            sleep=lambda s: None)
+    hay = np.array([2, 4, 8], dtype=np.int64)
+    out = gk.lookup_keys(hay, np.array([4], dtype=np.int64))
+    assert np.array_equal(out, [1])                 # numpy served it
+    actions = [e.action for e in gk.pop_events()]
+    assert actions == ["retry", "retry", "downgrade"]
+
+
+def test_demotion_after_threshold_is_process_wide():
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="intersect_keys",
+                   backend="jax-jit", at=1, times=999)]))
+    gk = kbk.GuardedKernels("jax-jit", demote_after=3,
+                            sleep=lambda s: None)
+    a = np.array([1, 2], dtype=np.int64)
+    for _ in range(3):
+        gk.intersect_keys(a, a)
+    evs = gk.pop_events()
+    assert [e.action for e in evs] == ["downgrade", "downgrade",
+                                       "downgrade", "demote"]
+    # demoted: later calls skip jax-jit entirely, even from a FRESH
+    # wrapper (demotion is process state, not instance state)
+    inj = install_injector(FaultInjector([]))       # no more faults
+    gk2 = kbk.GuardedKernels("jax-jit", sleep=lambda s: None)
+    assert np.array_equal(gk2.intersect_keys(a, a), [0, 1])
+    assert gk2.pop_events() == []                   # went straight past
+    assert inj.seam_faults_fired == 0
+    # ...but only for that seam: lookup_keys still uses jax-jit
+    hay = np.array([2, 4], dtype=np.int64)
+    assert np.array_equal(gk2.lookup_keys(hay, hay), [0, 1])
+
+
+def test_chain_exhaustion_raises_with_history():
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="segmented_reduce",
+                   backend="*", at=1, times=999)]))
+    gk = kbk.GuardedKernels("numpy", sleep=lambda s: None)
+    with pytest.raises(kbk.KernelChainExhausted, match="segmented_reduce"):
+        gk.segmented_reduce(np.ones(4), np.array([0, 2]))
+    evs = gk.pop_events()
+    assert evs and evs[-1].action == "downgrade"
+    assert evs[-1].fallback == ""                   # end of the chain
+
+
+def test_corrupted_output_caught_by_postcondition():
+    """A NaN-poisoned reduction (guard-level warn/strict) is caught by
+    the seam postcondition and converted into a downgrade -- the final
+    result is still numerically correct."""
+    install_injector(FaultInjector(
+        [FaultSpec(kind="nan", seam="segmented_reduce",
+                   backend="jax-jit", at=1)]))
+    gk = kbk.GuardedKernels("jax-jit", sleep=lambda s: None)
+    vals = np.array([1.0, 2.0, 3.0, 4.0])
+    out = gk.segmented_reduce(vals, np.array([0, 2]))
+    assert np.array_equal(out, [3.0, 7.0])
+    evs = gk.pop_events()
+    assert [e.action for e in evs] == ["downgrade"]
+    assert evs[0].exc_type == "SeamPostconditionError"
+
+
+def test_corrupted_union_caught_by_postcondition():
+    install_injector(FaultInjector(
+        [FaultSpec(kind="corrupt-pos", seam="union_keys",
+                   backend="jax-jit", at=1)]))
+    gk = kbk.GuardedKernels("jax-jit", sleep=lambda s: None)
+    a = np.array([1, 3], dtype=np.int64)
+    b = np.array([2, 3], dtype=np.int64)
+    u, pa, pb = gk.union_keys(a, b)
+    assert np.array_equal(u, [1, 2, 3])
+    evs = gk.pop_events()
+    assert evs and evs[0].exc_type == "SeamPostconditionError"
+
+
+def test_guards_off_lets_corruption_through(monkeypatch):
+    """REPRO_GUARDS=off disables postconditions (the documented escape
+    hatch): the corrupted output flows through un-checked."""
+    monkeypatch.setenv("REPRO_GUARDS", "off")
+    install_injector(FaultInjector(
+        [FaultSpec(kind="nan", seam="segmented_reduce",
+                   backend="numpy", at=1)]))
+    gk = kbk.GuardedKernels("numpy", sleep=lambda s: None)
+    out = gk.segmented_reduce(np.ones(4), np.array([0, 2]))
+    assert np.isnan(out[0])
+    assert gk.pop_events() == []
+
+
+def test_silent_downgrade_accounting():
+    """verify_no_silent_downgrades: every injected seam fault must be
+    covered by a recorded event."""
+    inj = install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="intersect_keys",
+                   backend="jax-jit", at=1)]))
+    gk = kbk.GuardedKernels("jax-jit", sleep=lambda s: None)
+    a = np.array([1, 2], dtype=np.int64)
+    gk.intersect_keys(a, a)
+    verify_no_silent_downgrades()                   # 1 fired, 1 recorded
+    # simulate a silent swallow: another fault fired with no event
+    inj.seam_faults_fired += 1
+    with pytest.raises(AssertionError, match="silent downgrade"):
+        verify_no_silent_downgrades()
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: zoo accelerators + graph designs stay bit-exact under
+# injected failure of a backend at any seam
+# ---------------------------------------------------------------------- #
+ACCELS = [
+    ("outerspace", outerspace, None),
+    ("extensor", extensor, extensor.DEFAULT_PARAMS),
+    ("gamma", gamma, None),
+    ("sigma", sigma, None),
+    ("matraptor", matraptor, None),
+]
+
+
+def _assert_equivalent_under_faults(spec, inputs, shapes, params=None):
+    """python-oracle vs faulted vector backend: bit-identical tensors
+    and matching aggregate instrumentation counts."""
+    outs, cis, res_v = {}, {}, None
+    for bk in ("python", "vector"):
+        ci = CollectingInstr()
+        backend = bk if bk == "python" else VectorBackend(
+            kernel_backend=kbk.GuardedKernels("jax-jit",
+                                              sleep=lambda s: None))
+        sim = CascadeSimulator(spec, params=params, model=False,
+                               extra_instr=ci, backend=backend)
+        res = sim.run(dict(inputs), shapes)
+        outs[bk] = {n: res[n].to_dense() for n in res.tensors}
+        cis[bk] = ci
+        if bk == "vector":
+            res_v = res
+    for n in outs["python"]:
+        assert np.array_equal(outs["python"][n], outs["vector"][n]), \
+            f"{spec.name}:{n} differs under injected faults"
+    for attr in COUNTERS:
+        assert getattr(cis["python"], attr) == getattr(cis["vector"],
+                                                       attr), attr
+    return res_v
+
+
+@pytest.mark.parametrize("name,mod,params", ACCELS,
+                         ids=[a[0] for a in ACCELS])
+def test_accelerators_bit_exact_with_failing_backend(name, mod, params,
+                                                     rng, spmat):
+    """Every seam call on the primary backend fails permanently; the
+    whole cascade must complete bit-exact vs the oracle, with the
+    downgrades surfaced on the SimResult (never silent)."""
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="*", backend="jax-jit",
+                   at=1, times=10**6)]))
+    M = K = N = 24
+    inputs = {"A": spmat(rng, M, K, 0.2), "B": spmat(rng, K, N, 0.2)}
+    res = _assert_equivalent_under_faults(
+        mod.spec(), inputs, {"m": M, "k": K, "n": N}, params)
+    assert res.downgrade_events, f"{name}: downgrades not surfaced"
+    verify_no_silent_downgrades()
+
+
+@pytest.mark.parametrize("seam", kbk.GUARDED_SEAMS)
+def test_single_seam_failure_bit_exact(seam, rng, spmat):
+    """Failing exactly one seam (all others healthy) downgrades only
+    that seam and stays bit-exact.  MatRaptor's row-wise dataflow plus
+    sparse-add exercises every one of the five seams."""
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam=seam, backend="jax-jit",
+                   at=1, times=10**6)]))
+    from repro.accelerators.zoo import ZOO
+    inputs = {"A": spmat(rng, 20, 20, 0.3), "B": spmat(rng, 20, 20, 0.3)}
+    for zname in ("rowwise-spmspm", "sparse-add", "elementwise-3way"):
+        z_inputs = dict(inputs)
+        shapes = {"m": 20, "k": 20, "n": 20}
+        if zname in ("elementwise-3way",):
+            z_inputs["C"] = spmat(rng, 20, 20, 0.3)
+            shapes = {"m": 20, "n": 20}
+        elif zname == "sparse-add":
+            shapes = {"m": 20, "n": 20}
+        _assert_equivalent_under_faults(ZOO[zname](), z_inputs, shapes)
+    verify_no_silent_downgrades()
+
+
+@pytest.mark.parametrize("design", ["graphicionado", "graphdyns", "ours"])
+def test_graph_designs_bit_exact_with_failing_backend(design):
+    """The three vertex-centric graph designs (min-plus, iterative,
+    update-in-place) complete BFS bit-exact vs the oracle while the
+    primary kernel backend fails at every seam."""
+    from benchmarks.workloads import grid_graph
+    from repro.accelerators import graphicionado as G
+    from repro.core.einsum import Semiring
+
+    adj = grid_graph(5, extra=4)
+    v = adj.shape[0]
+    spec = {
+        "graphicionado": lambda: G.graphicionado_spec(weighted=False),
+        "graphdyns": lambda: G.graphdyns_spec(weighted=False,
+                                              n_vertices=v),
+        "ours": lambda: G.improved_spec(weighted=False),
+    }[design]()
+    a0 = np.zeros(v)
+    a0[0] = 1.0
+    p0 = np.zeros(v)
+    p0[0] = 1.0
+    outs = {}
+    for bk in ("python", "vector"):
+        clear_injector()
+        if bk == "vector":
+            install_injector(FaultInjector(
+                [FaultSpec(kind="raise", seam="*", backend="jax-jit",
+                           at=1, times=10**6)]))
+        backend = bk if bk == "python" else VectorBackend(
+            kernel_backend=kbk.GuardedKernels("jax-jit",
+                                              sleep=lambda s: None))
+        sim = CascadeSimulator(spec, semiring=Semiring.min_plus(),
+                               model=False, backend=backend)
+        res, _ = sim.run_iterative(
+            {"G": adj.copy(), "A0": a0.copy(), "P0": p0.copy()},
+            carry={"A0": "A1", "P0": "P1"}, done_when_empty="A1",
+            max_iters=60, var_shapes={"d": v, "s": v})
+        outs[bk] = {n: res[n].to_dense() for n in res.tensors}
+    for n in outs["python"]:
+        assert np.array_equal(outs["python"][n], outs["vector"][n]), n
+    verify_no_silent_downgrades()
+
+
+def test_chain_exhaustion_isolated_per_einsum(rng, spmat):
+    """When the WHOLE chain fails (terminal numpy included) the
+    affected Einsum falls back to the interpreter oracle -- outputs
+    still bit-exact, reason surfaced, nothing silent."""
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="intersect_keys", backend="*",
+                   at=1, times=10**6)]))
+    from repro.accelerators.zoo import ZOO
+    inputs, shapes = _spmm(rng)
+    vb = VectorBackend(kernel_backend=kbk.GuardedKernels(
+        "numpy", sleep=lambda s: None))
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](), model=False,
+                           backend=vb)
+    res = sim.run(dict(inputs), shapes)
+    # oracle result for comparison
+    sim_p = CascadeSimulator(ZOO["rowwise-spmspm"](), model=False,
+                             backend="python")
+    res_p = sim_p.run(dict(inputs), shapes)
+    for n in res_p.tensors:
+        assert np.array_equal(res_p[n].to_dense(), res[n].to_dense()), n
+    assert res.fallback_reasons, "isolation must surface a reason"
+    reason = next(iter(res.fallback_reasons.values()))
+    assert "KernelChainExhausted" in reason
+    verify_no_silent_downgrades()
+
+
+def test_downgrade_events_surfaced_on_report(rng, spmat):
+    install_injector(FaultInjector(
+        [FaultSpec(kind="raise", seam="intersect_keys",
+                   backend="jax-jit", at=1)]))
+    from repro.accelerators.zoo import ZOO
+    inputs, shapes = _spmm(rng)
+    vb = VectorBackend(kernel_backend=kbk.GuardedKernels(
+        "jax-jit", sleep=lambda s: None))
+    sim = CascadeSimulator(ZOO["rowwise-spmspm"](), backend=vb)
+    res = sim.run(dict(inputs), shapes)
+    assert res.downgrade_events
+    evs = next(iter(res.downgrade_events.values()))
+    assert evs[0].seam == "intersect_keys"
+    assert evs[0].action == "downgrade"
+    assert res.report.downgrade_events == res.downgrade_events
+
+
+# ---------------------------------------------------------------------- #
+# sweep fault-tolerance
+# ---------------------------------------------------------------------- #
+def _sweep_fixture(rng, **engine_kw):
+    from repro.dse import DesignSpace, SweepEngine
+    inputs, shapes = _spmm(rng, n=24, d=0.2)
+    space = DesignSpace("gamma", axes={
+        "fibercache_mb": [0.25, 0.5, 1.0, 2.0, 3.0, 4.0]})
+    eng = SweepEngine(inputs, shapes, **engine_kw)
+    return eng, space.grid()
+
+
+def test_point_failures_are_structured_and_partial_front_works(rng):
+    from repro.dse import pareto_front
+    eng, pts = _sweep_fixture(rng)
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-error", point=pts[1].label, at=1,
+                   times=99),
+         FaultSpec(kind="point-error", point=pts[4].label, at=1,
+                   times=99)]))
+    results = eng.sweep(pts)
+    assert len(results) == len(pts)
+    bad = [r for r in results if not r.ok]
+    assert {r.label for r in bad} == {pts[1].label, pts[4].label}
+    for r in bad:
+        assert r.error_type == "InjectedFault"
+        assert "injected point failure" in r.error
+        assert r.traceback and "InjectedFault" in r.traceback
+        assert r.status == "failed"
+    cov = eng.last_coverage
+    assert cov["total"] == 6 and cov["ok"] == 4 and cov["failed"] == 2
+    front = pareto_front([r for r in results if r.ok])
+    assert front and all(r.ok for r in front)
+    assert "4/6 ok" in eng.summarize(results)
+
+
+def test_point_retry_recovers_transient_failure(rng):
+    eng, pts = _sweep_fixture(rng, point_retries=2)
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-error", point=pts[0].label, at=1,
+                   times=1)]))
+    res = eng.evaluate(pts[0])
+    assert res.ok and res.attempts == 2
+
+
+def test_point_timeout_is_bounded(rng):
+    eng, pts = _sweep_fixture(rng, point_timeout_s=0.25)
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-delay", delay_s=30.0,
+                   point=pts[0].label, at=1)]))
+    res = eng.evaluate(pts[0])
+    assert res.timed_out and res.error_type == "TimeoutError"
+    assert res.status == "timeout"
+    assert res.wall_seconds <= 1.0
+
+
+def test_crash_checkpoint_resume_identical_pareto(rng, tmp_path):
+    """A sweep killed mid-flight by SimulatedCrash leaves an atomic
+    checkpoint; resuming completes the remaining points and the Pareto
+    front is bit-identical to an uninterrupted run."""
+    from repro.dse import pareto_front
+
+    # ground truth: uninterrupted sweep
+    eng0, pts = _sweep_fixture(np.random.default_rng(0))
+    truth = eng0.sweep(pts)
+    truth_front = [(r.label, r.seconds, r.energy_pj, r.dram_bytes)
+                   for r in pareto_front(truth)]
+
+    # crashing sweep: dies at the 4th point, checkpointing every
+    # completion
+    eng1, pts = _sweep_fixture(np.random.default_rng(0))
+    install_injector(FaultInjector(
+        [FaultSpec(kind="crash", point=pts[3].label, at=1)]))
+    ckpt = tmp_path / "sweep"
+    with pytest.raises(SimulatedCrash):
+        eng1.sweep(pts, checkpoint_dir=str(ckpt), checkpoint_every=1)
+    assert (ckpt / "LATEST").exists()
+
+    # resumed sweep: restores the checkpointed points, evaluates the
+    # rest
+    clear_injector()
+    eng2, pts = _sweep_fixture(np.random.default_rng(0))
+    results = eng2.sweep(pts, checkpoint_dir=str(ckpt), resume=True)
+    assert len(results) == len(pts)
+    restored = [r for r in results if r.restored]
+    assert restored and len(restored) < len(pts)
+    assert eng2.last_coverage["skipped"] == len(restored)
+    got_front = [(r.label, r.seconds, r.energy_pj, r.dram_bytes)
+                 for r in pareto_front(results)]
+    assert got_front == truth_front                 # bit-identical
+
+
+def test_resume_after_completion_restores_everything(rng, tmp_path):
+    eng, pts = _sweep_fixture(rng)
+    ckpt = tmp_path / "sweep"
+    r1 = eng.sweep(pts, checkpoint_dir=str(ckpt))
+    eng2, pts = _sweep_fixture(np.random.default_rng(0))
+    r2 = eng2.sweep(pts, checkpoint_dir=str(ckpt), resume=True)
+    assert all(r.restored for r in r2)
+    assert eng2.points_evaluated == 0
+    for a, b in zip(r1, r2):
+        assert (a.label, a.seconds, a.energy_pj, a.dram_bytes) == \
+            (b.label, b.seconds, b.energy_pj, b.dram_bytes)
+
+
+def test_checkpoint_preserves_structured_errors(rng, tmp_path):
+    eng, pts = _sweep_fixture(rng)
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-error", point=pts[2].label, at=1,
+                   times=99)]))
+    ckpt = tmp_path / "sweep"
+    eng.sweep(pts, checkpoint_dir=str(ckpt))
+    clear_injector()
+    eng2, pts = _sweep_fixture(np.random.default_rng(0))
+    results = eng2.sweep(pts, checkpoint_dir=str(ckpt), resume=True)
+    bad = [r for r in results if not r.ok]
+    assert len(bad) == 1 and bad[0].restored
+    assert bad[0].error_type == "InjectedFault"
+    assert "injected point failure" in bad[0].error
+
+
+def test_parallel_sweep_with_faults_matches_serial(rng):
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-error", point="fibercache_mb=1.0",
+                   at=1, times=99)]))
+    eng_s, pts = _sweep_fixture(np.random.default_rng(0))
+    serial = eng_s.sweep(pts)
+    install_injector(FaultInjector(
+        [FaultSpec(kind="point-error", point="fibercache_mb=1.0",
+                   at=1, times=99)]))
+    eng_p, pts = _sweep_fixture(np.random.default_rng(0),
+                                max_workers=4)
+    par = eng_p.sweep(pts)
+    for a, b in zip(serial, par):
+        assert a.label == b.label and a.ok == b.ok
+        if a.ok:
+            assert (a.seconds, a.energy_pj, a.dram_bytes) == \
+                (b.seconds, b.energy_pj, b.dram_bytes)
