@@ -297,7 +297,8 @@ def run(backend: str = "both", smoke: bool = False
 def profile_stages(sizes: Optional[List[int]] = None) -> None:
     """Per-stage wall-time breakdown of the vector path (materialize /
     pair-merge / lookup / finalize / reduce / output-build) for each
-    workload, from ``VectorBackend.stage_times``."""
+    workload, from the backend's public ``stage_seconds`` accessor
+    (the same dict ``SimResult.stage_seconds`` surfaces)."""
     jobs: List[Tuple[str, object, List[str], int]] = []
     plan = MappingResolver(rowwise_spmspm()).plan("Z")
     for n in (sizes or [SIZES[-1]]):
@@ -315,10 +316,11 @@ def profile_stages(sizes: Optional[List[int]] = None) -> None:
         t0 = time.time()
         _, stats = vb.execute_csf(plan_, {"A": a, "B": b})
         wall = time.time() - t0
-        staged = sum(vb.stage_times.values())
+        stage_seconds = vb.stage_seconds
+        staged = sum(stage_seconds.values())
         print(f"{wname} n={n}: {wall:.3f}s wall, "
               f"{stats['muls'] / max(wall, 1e-9) / 1e6:.2f} M muls/s")
-        for stage, dt in sorted(vb.stage_times.items(),
+        for stage, dt in sorted(stage_seconds.items(),
                                 key=lambda kv: -kv[1]):
             print(f"  {stage:<14} {dt:7.3f}s  {dt / wall * 100:5.1f}%")
         print(f"  {'(untracked)':<14} {wall - staged:7.3f}s  "
@@ -338,15 +340,22 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="print per-stage vector-path wall-time "
                          "breakdown instead of recording rates")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace "
+                         "(*.jsonl for the structured event log) of "
+                         "the benchmark run")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes
              else (SMOKE_SIZES if args.smoke else SIZES))
     if args.profile:
         profile_stages(sizes if args.sizes or args.smoke else None)
         return
-    records = bench(sizes=sizes, backend=args.backend,
-                    py_max_size=max(sizes) if args.smoke else PY_MAX_SIZE,
-                    mapped_sizes=SMOKE_SIZES if args.smoke else None)
+    from repro.obs.export import cli_trace
+    with cli_trace(args.trace):
+        records = bench(sizes=sizes, backend=args.backend,
+                        py_max_size=max(sizes) if args.smoke
+                        else PY_MAX_SIZE,
+                        mapped_sizes=SMOKE_SIZES if args.smoke else None)
     summary = summarize(records)
     print(json.dumps(summary, indent=2))
     if args.record:

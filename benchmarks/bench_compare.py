@@ -1,0 +1,204 @@
+"""Regression gate: fresh smoke run vs the committed BENCH baselines.
+
+Turns the ROADMAP's "must not regress ``vector_rate*``" rule from a
+convention into an enforced check.  Three legs:
+
+* **backend** -- re-runs ``backend_throughput.bench`` at the
+  comparison size (1024, a committed full-run size, so fresh records
+  diff directly against ``BENCH_backend.json`` entries) and checks,
+  per (workload, backend, size) record: work invariants
+  (``elements`` / ``out_nnz`` / ``nnz_a`` / ``nnz_b``) **exactly**,
+  and ``elements_per_sec`` one-sided -- a fresh rate below
+  ``committed * (1 - tolerance)`` is a regression, a faster rate
+  passes.
+* **dse** -- re-runs the analytic capacity sweep (it is closed-form
+  and fast at full size) and checks ``points`` / ``pareto_points``
+  exactly and ``analytic_rate`` one-sided.
+* **graph** -- checks the committed ``BENCH_graph.json`` Fig-13
+  direction claims structurally (GraphDynS beats Graphicionado, ours
+  beats GraphDynS on BFS) without re-running the multi-minute
+  workload.
+
+Exit status is nonzero on any regression; every comparison prints a
+``key, committed, fresh, verdict`` row.  ``--skip`` drops a leg (CI
+keeps all three).  Rates are host-dependent: the committed baselines
+must have been recorded on comparable hardware (CI re-records them on
+the runner class it compares on).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCH_BACKEND = ROOT / "BENCH_backend.json"
+BENCH_DSE = ROOT / "BENCH_dse.json"
+BENCH_GRAPH = ROOT / "BENCH_graph.json"
+
+#: the size whose committed records the fresh run compares against --
+#: large enough that rates are stable, small enough for CI
+COMPARE_SIZE = 1024
+
+#: work-count keys that must match bit-for-bit (the workload is seeded)
+EXACT_KEYS = ("elements", "out_nnz", "nnz_a", "nnz_b")
+
+
+class Gate:
+    """Collects comparison rows and the overall verdict."""
+
+    def __init__(self) -> None:
+        self.rows: List[Tuple[str, str, str, str]] = []
+        self.failures = 0
+
+    def check(self, key: str, committed, fresh, ok: bool) -> None:
+        verdict = "ok" if ok else "REGRESSION"
+        if not ok:
+            self.failures += 1
+        self.rows.append((key, str(committed), str(fresh), verdict))
+
+    def rate(self, key: str, committed: float, fresh: float,
+             tolerance: float) -> None:
+        """One-sided: fresh below committed*(1-tol) fails."""
+        self.check(key, round(committed, 1), round(fresh, 1),
+                   fresh >= committed * (1.0 - tolerance))
+
+    def exact(self, key: str, committed, fresh) -> None:
+        self.check(key, committed, fresh, committed == fresh)
+
+    def skip(self, key: str, why: str) -> None:
+        self.rows.append((key, "-", "-", f"skipped ({why})"))
+
+    def report(self) -> str:
+        w = max((len(r[0]) for r in self.rows), default=10) + 2
+        lines = [f"{'key':<{w}} {'committed':>14} {'fresh':>14} verdict"]
+        for key, c, f, v in self.rows:
+            lines.append(f"{key:<{w}} {c:>14} {f:>14} {v}")
+        lines.append(f"# {self.failures} regression(s)"
+                     if self.failures else "# all comparisons passed")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------- #
+def _load(path: Path) -> Optional[Dict]:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def compare_backend(gate: Gate, tolerance: float,
+                    fresh_records: Optional[List[Dict]] = None) -> None:
+    committed = _load(BENCH_BACKEND)
+    if committed is None:
+        gate.skip("backend", f"{BENCH_BACKEND.name} missing")
+        return
+    base = {(r.get("workload", "rowwise"), r["backend"], r["size"]): r
+            for r in committed.get("records", [])}
+    wanted = [k for k in base if k[2] == COMPARE_SIZE]
+    if not wanted:
+        gate.skip("backend", f"no committed records at n={COMPARE_SIZE}")
+        return
+    if fresh_records is None:
+        from benchmarks.backend_throughput import bench
+        fresh_records = bench(sizes=[COMPARE_SIZE], backend="both",
+                              py_max_size=COMPARE_SIZE,
+                              mapped_sizes=[COMPARE_SIZE])
+    fresh = {(r.get("workload", "rowwise"), r["backend"], r["size"]): r
+             for r in fresh_records}
+    for key in sorted(wanted):
+        label = f"backend/{key[0]}/{key[1]}/n{key[2]}"
+        fr = fresh.get(key)
+        if fr is None:
+            gate.check(label, "present", "missing", False)
+            continue
+        for field in EXACT_KEYS:
+            gate.exact(f"{label}/{field}", base[key][field], fr[field])
+        gate.rate(f"{label}/elements_per_sec",
+                  base[key]["elements_per_sec"],
+                  fr["elements_per_sec"], tolerance)
+
+
+def compare_dse(gate: Gate, tolerance: float,
+                fresh_summary: Optional[Dict] = None) -> None:
+    committed = _load(BENCH_DSE)
+    if committed is None:
+        gate.skip("dse", f"{BENCH_DSE.name} missing")
+        return
+    if fresh_summary is None:
+        from benchmarks.dse_sweep import bench
+        fresh_summary = bench(backend="analytic")
+    base_rec = next((r for r in committed.get("records", [])
+                     if r["backend"] == "analytic"), None)
+    fresh_rec = next((r for r in fresh_summary.get("records", [])
+                      if r["backend"] == "analytic"), None)
+    if base_rec is None or fresh_rec is None:
+        gate.skip("dse", "no analytic record to compare")
+        return
+    gate.exact("dse/analytic/points", base_rec["points"],
+               fresh_rec["points"])
+    gate.exact("dse/analytic/pareto_points",
+               base_rec["pareto_points"], fresh_rec["pareto_points"])
+    gate.exact("dse/analytic/traffic_range_kb",
+               base_rec["traffic_range_kb"],
+               fresh_rec["traffic_range_kb"])
+    gate.rate("dse/analytic_rate", committed.get("analytic_rate", 0.0),
+              fresh_summary.get("analytic_rate", 0.0), tolerance)
+
+
+def compare_graph(gate: Gate) -> None:
+    """Structural Fig-13 direction claims on the committed baseline
+    (the graph workload is minutes-long; re-running it is the
+    bench-smoke job's fig13 leg, not this gate's)."""
+    committed = _load(BENCH_GRAPH)
+    if committed is None:
+        gate.skip("graph", f"{BENCH_GRAPH.name} missing")
+        return
+    runs = committed.get("runs", {})
+
+    def seconds(key: str) -> float:
+        return runs.get(key, {}).get("modeled_seconds", float("nan"))
+
+    gate.check("graph/bfs/graphdyns_beats_graphicionado",
+               round(seconds("bfs/graphicionado"), 6),
+               round(seconds("bfs/graphdyns"), 6),
+               seconds("bfs/graphdyns") < seconds("bfs/graphicionado"))
+    gate.check("graph/bfs/ours_beats_graphdyns",
+               round(seconds("bfs/graphdyns"), 6),
+               round(seconds("bfs/ours"), 6),
+               seconds("bfs/ours") < seconds("bfs/graphdyns"))
+    claims = committed.get("claims", {})
+    for claim in ("graphdyns_beats_graphicionado",
+                  "ours_beats_graphdyns_bfs"):
+        gate.exact(f"graph/claims/{claim}", True,
+                   bool(claims.get(claim)))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed one-sided fractional rate drop "
+                         "before a comparison fails (default 0.25)")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=["backend", "dse", "graph"],
+                    help="drop a comparison leg (repeatable)")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace of "
+                         "the fresh comparison runs")
+    args = ap.parse_args(argv)
+    gate = Gate()
+    from repro.obs.export import cli_trace
+    with cli_trace(args.trace):
+        if "backend" not in args.skip:
+            compare_backend(gate, args.tolerance)
+        if "dse" not in args.skip:
+            compare_dse(gate, args.tolerance)
+        if "graph" not in args.skip:
+            compare_graph(gate)
+    print(gate.report())
+    return 1 if gate.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -154,6 +154,10 @@ def main() -> None:
                     "is recorded as timed out and the sweep proceeds")
     ap.add_argument("--point-retries", type=int, default=0,
                     help="bounded re-evaluations of a failed point")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace "
+                         "(*.jsonl for the structured event log) of "
+                         "the sweep (one span per point)")
     args = ap.parse_args()
     if args.resume and not args.checkpoint:
         ap.error("--resume requires --checkpoint DIR")
@@ -165,8 +169,10 @@ def main() -> None:
         sweep_kw = {"checkpoint_dir": args.checkpoint,
                     "checkpoint_every": args.checkpoint_every,
                     "resume": args.resume}
-    summary = bench(capacities=caps, backend=args.backend,
-                    engine_kw=engine_kw, sweep_kw=sweep_kw)
+    from repro.obs.export import cli_trace
+    with cli_trace(args.trace):
+        summary = bench(capacities=caps, backend=args.backend,
+                        engine_kw=engine_kw, sweep_kw=sweep_kw)
     print(json.dumps(summary, indent=2))
     if args.record:
         BENCH_JSON.write_text(json.dumps(summary, indent=2) + "\n")

@@ -161,6 +161,10 @@ def main() -> None:
     ap.add_argument("--explain-fallbacks", action="store_true",
                     help="print per-Einsum fallback_reasons for every "
                     "accelerator and zoo cascade, then exit")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace "
+                    "(*.jsonl for the structured event log) covering "
+                    "every benchmark in the run")
     args = ap.parse_args()
     if args.explain_fallbacks:
         n = explain_fallbacks(args.backend or "vector")
@@ -176,32 +180,35 @@ def main() -> None:
     else:
         names = list(BENCHES)
 
+    from repro.obs.export import cli_trace
     print("name,us_per_call,derived")
     failures = 0
-    for name in names:
-        mod_name = BENCHES[name]
-        t0 = time.time()
-        try:
-            mod = __import__(mod_name, fromlist=["run"])
-            kwargs = {}
-            params = inspect.signature(mod.run).parameters
-            if args.backend is not None and "backend" in params:
-                # 'both' is a harness-level concept only the throughput
-                # bench understands; single-backend benches keep their
-                # default rather than receiving an invalid selection
-                if args.backend != "both" or name == "backend":
-                    kwargs["backend"] = args.backend
-            if args.smoke and "smoke" in params:
-                kwargs["smoke"] = True
-            rows = mod.run(**kwargs)
-            for rname, us, derived in rows:
-                print(f"{rname},{us:.1f},{derived}")
-            print(f"# {name} done in {time.time() - t0:.1f}s",
-                  file=sys.stderr)
-        except Exception:
-            failures += 1
-            traceback.print_exc()
-            print(f"{name}/FAILED,0.0,0.0")
+    with cli_trace(args.trace):
+        for name in names:
+            mod_name = BENCHES[name]
+            t0 = time.time()
+            try:
+                mod = __import__(mod_name, fromlist=["run"])
+                kwargs = {}
+                params = inspect.signature(mod.run).parameters
+                if args.backend is not None and "backend" in params:
+                    # 'both' is a harness-level concept only the
+                    # throughput bench understands; single-backend
+                    # benches keep their default rather than receiving
+                    # an invalid selection
+                    if args.backend != "both" or name == "backend":
+                        kwargs["backend"] = args.backend
+                if args.smoke and "smoke" in params:
+                    kwargs["smoke"] = True
+                rows = mod.run(**kwargs)
+                for rname, us, derived in rows:
+                    print(f"{rname},{us:.1f},{derived}")
+                print(f"# {name} done in {time.time() - t0:.1f}s",
+                      file=sys.stderr)
+            except Exception:
+                failures += 1
+                traceback.print_exc()
+                print(f"{name}/FAILED,0.0,0.0")
     if failures:
         raise SystemExit(1)
 

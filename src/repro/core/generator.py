@@ -146,6 +146,10 @@ class SimResult:
     #: Einsum executed (guarded-chain retries / downgrades / demotions;
     #: empty when every seam call succeeded on its primary backend)
     downgrade_events: Dict[str, list] = field(default_factory=dict)
+    #: einsum -> {stage: wall seconds} from a profiling backend
+    #: (VectorBackend pipeline stages; empty unless the backend
+    #: profiled -- `profile=True` or an active tracer)
+    stage_seconds: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def __getitem__(self, name: str) -> FTensor:
         return self.tensors[name]
@@ -226,6 +230,16 @@ class CascadeSimulator:
     # ------------------------------------------------------------------ #
     def run(self, inputs: Dict[str, Any],
             var_shapes: Optional[Dict[str, int]] = None) -> SimResult:
+        from repro.obs.spans import maybe_span
+
+        with maybe_span("cascade:" + (self.spec.name or "cascade"),
+                        "cascade",
+                        {"backend": getattr(self.backend, "name", "?")}):
+            return self._run_cascade(inputs, var_shapes)
+
+    def _run_cascade(self, inputs: Dict[str, Any],
+                     var_shapes: Optional[Dict[str, int]] = None
+                     ) -> SimResult:
         from .einsum import TensorAccess as _TA
 
         store: Dict[str, FTensor] = {
@@ -233,6 +247,7 @@ class CascadeSimulator:
         shapes = self._var_shapes(store, var_shapes)
         fallbacks: Dict[str, str] = {}
         downgrades: Dict[str, list] = {}
+        stage_secs: Dict[str, Dict[str, float]] = {}
 
         # consecutive independent Einsums (no member reads or rewrites
         # another member's output) batch into one execute_batch call;
@@ -254,12 +269,16 @@ class CascadeSimulator:
                 or []
             events = getattr(self.backend, "last_batch_downgrades", []) \
                 or []
+            stages = getattr(self.backend, "last_batch_stage_seconds",
+                             []) or []
             for i, (o_name, out_exec) in enumerate(zip(pending_out, outs)):
                 if i < len(paths) and paths[i] == "fallback":
                     fallbacks[o_name] = (reasons[i]
                                          if i < len(reasons) else "") or ""
                 if i < len(events) and events[i]:
                     downgrades[o_name] = list(events[i])
+                if i < len(stages) and stages[i]:
+                    stage_secs[o_name] = dict(stages[i])
                 declared_order = (self.spec.mapping.rank_order.get(o_name)
                                   or self.spec.einsum.declaration[o_name])
                 decl_shapes = {}
@@ -348,9 +367,17 @@ class CascadeSimulator:
         if report is not None:
             report.fallback_reasons = dict(fallbacks)
             report.downgrade_events = dict(downgrades)
+            # per-Einsum stage seconds aggregate into one dict on the
+            # report (the cross-cascade pipeline profile)
+            agg: Dict[str, float] = {}
+            for per in stage_secs.values():
+                for k, v in per.items():
+                    agg[k] = agg.get(k, 0.0) + float(v)
+            report.stage_seconds = agg
         return SimResult(tensors=store, report=report,
                          fallback_reasons=dict(fallbacks),
-                         downgrade_events=dict(downgrades))
+                         downgrade_events=dict(downgrades),
+                         stage_seconds=dict(stage_secs))
 
     # ------------------------------------------------------------------ #
     def run_iterative(self, inputs: Dict[str, Any],

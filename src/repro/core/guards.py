@@ -73,6 +73,16 @@ def violation(check: str, site: str, detail: str = "") -> None:
         return
     msg = f"guard {check!r} violated at {site}" + \
         (f": {detail}" if detail else "")
+    # telemetry first -- a strict-mode raise must not lose the tally.
+    # Imported lazily: violations are rare, and repro.obs must stay
+    # import-free from the guard hot path.
+    from repro.obs.metrics import metrics
+    from repro.obs.spans import active_tracer
+    metrics().counter(f"guards.violation/{check}").inc()
+    tr = active_tracer()
+    if tr is not None:
+        tr.instant(f"guard:{check}", cat="guard",
+                   args={"site": site, "detail": detail, "level": lv})
     if lv == "strict":
         raise GuardViolation(msg)
     key = (check, site)

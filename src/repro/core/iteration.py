@@ -654,6 +654,12 @@ class ExecutorBackend:
         seam calls through a guarded degradation chain; the generator
         copies them onto ``SimResult.downgrade_events`` so no kernel
         downgrade is ever silent;
+      * ``stage_seconds`` / ``last_batch_stage_seconds`` -- per-stage
+        wall-second dicts from a profiling backend (VectorBackend's
+        pipeline stages); the generator aggregates them onto
+        ``SimResult.stage_seconds`` / ``Report.stage_seconds`` so
+        benchmarks read the public result instead of backend
+        internals;
       * ``prepare_inputs(plan, tensors, var_shapes) -> bool`` -- False
         lets the generator skip ``transform_all`` (analytic
         calibration-cache fast path);
@@ -689,10 +695,16 @@ class ExecutorBackend:
         The default lowering is the sequential loop; backends override
         to share work across the batch (``VectorBackend`` reuses its
         kernel dispatch and workspace buffers and records the per-
-        request paths on ``last_batch_paths``)."""
+        request paths on ``last_batch_paths``).  When a tracer is
+        installed each request runs inside an ``einsum:<output>`` span
+        so the batch seam carries the active trace (``VectorBackend``
+        opens its own richer span in ``execute`` instead)."""
+        from repro.obs.spans import maybe_span
         outs, paths, reasons, events = [], [], [], []
         for req in requests:
-            outs.append(self.execute(**req))
+            with maybe_span("einsum:" + req["plan"].output, "einsum",
+                            {"backend": getattr(self, "name", "?")}):
+                outs.append(self.execute(**req))
             paths.append(getattr(self, "last_path", None))
             reasons.append(getattr(self, "last_fallback_reason", None))
             events.append(list(getattr(self, "last_downgrades", ()) or ()))

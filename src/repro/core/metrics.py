@@ -70,6 +70,11 @@ class Report:
     #: chain retries / downgrades / demotions recorded during that
     #: Einsum's execution; empty when all seams ran on their primary)
     downgrade_events: Dict[str, list] = field(default_factory=dict)
+    #: {stage: host wall seconds} aggregated across the cascade from a
+    #: profiling backend (VectorBackend pipeline stages: materialize /
+    #: pair-merge / lookup / finalize / reduce / output-build); empty
+    #: unless the backend profiled
+    stage_seconds: Dict[str, float] = field(default_factory=dict)
 
     @property
     def dram_bytes(self) -> float:

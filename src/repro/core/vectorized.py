@@ -38,9 +38,13 @@ from __future__ import annotations
 
 import time
 from collections import Counter
+from contextlib import contextmanager
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import metrics as _obs_metrics
+from repro.obs.spans import active_tracer
 
 from .csf import CSF, _from_sorted_points
 from .einsum import BinOp, Semiring, Take, TensorAccess
@@ -65,6 +69,11 @@ DEFAULT_CHUNK_ITEMS = 512
 DENSE_GROUP_CAP = 1 << 25
 
 _I32_N = 1 << 31
+
+#: pipeline-stage order used when synthesizing stage spans from the
+#: accumulated profile timers (matches the stage_times key set)
+STAGE_ORDER = ("materialize", "pair-merge", "lookup", "finalize",
+               "reduce", "output-build")
 
 
 # ---------------------------------------------------------------------- #
@@ -401,6 +410,9 @@ class VectorBackend(ExecutorBackend):
         self.last_batch_paths: List[str] = []
         #: per-execution downgrade events for the last execute_batch
         self.last_batch_downgrades: List[List] = []
+        #: per-execution stage_seconds for the last execute_batch
+        #: (empty dicts unless profiling or tracing was active)
+        self.last_batch_stage_seconds: List[Dict[str, float]] = []
         self._ws = _Workspace()
         #: when True, per-stage wall time accumulates in stage_times
         #: ('materialize' / 'pair-merge' / 'lookup' / 'finalize' /
@@ -409,50 +421,120 @@ class VectorBackend(ExecutorBackend):
         self.stage_times: Counter = Counter()
 
     # ------------------------------------------------------------------ #
+    @property
+    def stage_seconds(self) -> Dict[str, float]:
+        """Per-stage wall seconds of the most recent execution -- the
+        public accessor for the profile timers (``SimResult`` /
+        ``Report`` surface the same dict as ``stage_seconds``)."""
+        return {k: float(v) for k, v in self.stage_times.items()}
+
+    @contextmanager
+    def _einsum_telemetry(self, name: str):
+        """``einsum:<name>`` span plus synthetic stage sub-spans
+        around one execution; yields ``None`` (and does nothing) when
+        no tracer is installed.
+
+        While active it forces stage profiling on so the existing
+        profile timers feed the trace, and tags the guarded kernel
+        dispatch with the Einsum name so seam spans and
+        ``DowngradeEvent``\\ s carry their attribution.  On exit the
+        accumulated per-stage seconds become one ``stage:<stage>``
+        span each, laid consecutively inside the einsum span's window
+        (aggregates, not real intervals -- marked ``synthetic``) and
+        added to the ``vector.stage_seconds/*`` counters.
+
+        The Einsum tag on the kernel dispatch is set regardless of
+        tracing (one attribute write): a ``DowngradeEvent`` recorded
+        on an untraced run still names the Einsum it struck."""
+        prev_einsum = getattr(self.kernels, "current_einsum", "")
+        tag = hasattr(self.kernels, "current_einsum")
+        if tag:
+            self.kernels.current_einsum = name
+        tr = active_tracer()
+        if tr is None:
+            try:
+                yield None
+            finally:
+                if tag:
+                    self.kernels.current_einsum = prev_einsum
+            return
+        prev_profile = self.profile
+        self.profile = True
+        snap = Counter(self.stage_times)
+        sp = tr.span(f"einsum:{name}", cat="einsum",
+                     args={"backend": self.name})
+        try:
+            with sp:
+                yield sp
+        finally:
+            self.profile = prev_profile
+            if tag:
+                self.kernels.current_einsum = prev_einsum
+            reg = _obs_metrics()
+            cursor = sp._start_us
+            for stage in STAGE_ORDER:
+                secs = float(self.stage_times[stage]) - float(snap[stage])
+                if secs <= 0.0:
+                    continue
+                reg.counter(f"vector.stage_seconds/{stage}").inc(secs)
+                dur_us = secs * 1e6
+                tr.add_span(f"stage:{stage}", "stage", cursor, dur_us,
+                            {"einsum": name, "parent": f"einsum:{name}",
+                             "synthetic": True})
+                cursor += dur_us
+
+    # ------------------------------------------------------------------ #
     def execute(self, plan, tensors, var_shapes, semiring=None, instr=None,
                 out_initial=None, isect_strategy="two_finger",
                 isect_leader=None) -> FTensor:
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
         self.stage_times = Counter()
-        try:
-            vp = lower(plan, var_shapes, semiring, out_initial,
-                       isect_strategy, isect_leader)
-            csf = {}
-            for a in vp.accs:
-                v = tensors[a.tensor]
-                csf[a.tensor] = v if isinstance(v, CSF) else \
-                    CSF.from_ftensor(v)
-            init_csf = None
-            if out_initial is not None:
-                init_csf = out_initial if isinstance(out_initial, CSF) \
-                    else CSF.from_ftensor(out_initial)
-            csf_out, _ = self._run(vp, plan, csf, instr,
-                                   out_initial=init_csf)
-            self.last_path = "vector"
-            self.last_fallback_reason = None
-            self.last_downgrades = self._drain_downgrades()
-            return csf_out.to_ftensor()
-        except Exception as exc:
-            if not (self.fallback and self._isolates(exc)):
+        with self._einsum_telemetry(plan.output) as sp:
+            try:
+                vp = lower(plan, var_shapes, semiring, out_initial,
+                           isect_strategy, isect_leader)
+                csf = {}
+                for a in vp.accs:
+                    v = tensors[a.tensor]
+                    csf[a.tensor] = v if isinstance(v, CSF) else \
+                        CSF.from_ftensor(v)
+                init_csf = None
+                if out_initial is not None:
+                    init_csf = out_initial if isinstance(out_initial, CSF) \
+                        else CSF.from_ftensor(out_initial)
+                csf_out, _ = self._run(vp, plan, csf, instr,
+                                       out_initial=init_csf)
+                self.last_path = "vector"
+                self.last_fallback_reason = None
                 self.last_downgrades = self._drain_downgrades()
-                raise
-            # the vector pipeline is poisoned for this Einsum only
-            # (inadmissible plan, exhausted kernel chain, violated
-            # runtime invariant): fall back to the interpreter oracle.
-            # _run emits instrumentation only on completion, so the
-            # oracle's counts are the run's counts -- parity preserved.
-            self.last_path = "fallback"
-            self.last_fallback_reason = f"{type(exc).__name__}: {exc}" \
-                if not isinstance(exc, (_Unsupported, _CapacityExceeded)) \
-                else str(exc)
-            self.last_downgrades = self._drain_downgrades()
-            ften = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
-                    for t, v in tensors.items()}
-            return self._oracle.execute(
-                plan, ften, var_shapes, semiring=semiring, instr=instr,
-                out_initial=out_initial, isect_strategy=isect_strategy,
-                isect_leader=isect_leader)
+                if sp is not None:
+                    sp.set("path", "vector")
+                return csf_out.to_ftensor()
+            except Exception as exc:
+                if not (self.fallback and self._isolates(exc)):
+                    self.last_downgrades = self._drain_downgrades()
+                    raise
+                # the vector pipeline is poisoned for this Einsum only
+                # (inadmissible plan, exhausted kernel chain, violated
+                # runtime invariant): fall back to the interpreter oracle.
+                # _run emits instrumentation only on completion, so the
+                # oracle's counts are the run's counts -- parity preserved.
+                self.last_path = "fallback"
+                self.last_fallback_reason = f"{type(exc).__name__}: {exc}" \
+                    if not isinstance(exc,
+                                      (_Unsupported, _CapacityExceeded)) \
+                    else str(exc)
+                self.last_downgrades = self._drain_downgrades()
+                if sp is not None:
+                    sp.set("path", "fallback")
+                    sp.set("fallback", self.last_fallback_reason)
+                ften = {t: (v.to_ftensor() if isinstance(v, CSF) else v)
+                        for t, v in tensors.items()}
+                return self._oracle.execute(
+                    plan, ften, var_shapes, semiring=semiring, instr=instr,
+                    out_initial=out_initial, isect_strategy=isect_strategy,
+                    isect_leader=isect_leader)
 
     @staticmethod
     def _isolates(exc: BaseException) -> bool:
@@ -482,6 +564,7 @@ class VectorBackend(ExecutorBackend):
         paths: List[str] = []
         reasons: List[Optional[str]] = []
         downgrades: List[List] = []
+        stages: List[Dict[str, float]] = []
         for req in requests:
             try:
                 outs.append(self.execute(**req))
@@ -499,14 +582,20 @@ class VectorBackend(ExecutorBackend):
                     self.last_batch_paths = paths
                     self.last_batch_fallbacks = reasons
                     self.last_batch_downgrades = downgrades
+                    self.last_batch_stage_seconds = stages
                     raise
                 outs.append(self._isolate_request(req, exc))
                 paths.append("fallback")
                 reasons.append(self.last_fallback_reason)
             downgrades.append(list(self.last_downgrades))
+            # execute() resets stage_times on entry, so this snapshot
+            # is this request's times alone (empty on fallback paths
+            # that never reached the pipeline)
+            stages.append(self.stage_seconds)
         self.last_batch_paths = paths
         self.last_batch_fallbacks = reasons
         self.last_batch_downgrades = downgrades
+        self.last_batch_stage_seconds = stages
         return outs
 
     def _isolate_request(self, req, exc: BaseException) -> FTensor:
@@ -534,16 +623,17 @@ class VectorBackend(ExecutorBackend):
         instr = instr or NullInstr()
         semiring = semiring or Semiring.arithmetic()
         self.stage_times = Counter()
-        shapes = dict(var_shapes or {})
-        for c in tensors.values():
-            for r, s in getattr(c, "rank_shapes", {}).items():
-                if isinstance(s, int):
-                    v = r.lower()
-                    shapes[v] = max(shapes.get(v, 0), s)
-        vp = lower(plan, shapes, semiring, None, isect_strategy,
-                   isect_leader)
-        exec_csf = prepare_csf_inputs(plan, tensors)
-        return self._run(vp, plan, exec_csf, instr)
+        with self._einsum_telemetry(plan.output):
+            shapes = dict(var_shapes or {})
+            for c in tensors.values():
+                for r, s in getattr(c, "rank_shapes", {}).items():
+                    if isinstance(s, int):
+                        v = r.lower()
+                        shapes[v] = max(shapes.get(v, 0), s)
+            vp = lower(plan, shapes, semiring, None, isect_strategy,
+                       isect_leader)
+            exec_csf = prepare_csf_inputs(plan, tensors)
+            return self._run(vp, plan, exec_csf, instr)
 
     # ------------------------------------------------------------------ #
     # the vector loop nest

@@ -154,17 +154,47 @@ class SweepEngine:
         re-attempts with backoff.  Never raises for a point failure --
         the error lands structured on the result (class name, message,
         trimmed traceback).  ``SimulatedCrash`` (a BaseException) is
-        deliberately not absorbed: it models the whole process dying."""
+        deliberately not absorbed: it models the whole process dying.
+
+        Telemetry: one ``point:<label>`` span per evaluation (status /
+        attempts / error in the span args) and unconditional
+        ``dse.point/<status>`` + ``dse.point_attempts`` counters, so
+        sweep health is visible with or without a trace attached."""
+        from repro.obs.metrics import metrics
+        from repro.obs.spans import active_tracer
+
+        tr = active_tracer()
+        sp = tr.span("point:" + point.label, "dse") if tr is not None \
+            else None
+        if sp is not None:
+            sp.__enter__()
         attempts = 0
-        while True:
-            attempts += 1
-            res = self._evaluate_attempt(point)
-            res.attempts = attempts
-            if res.ok or attempts > self.point_retries:
-                return res
-            if self.retry_backoff_s > 0.0:
-                time.sleep(min(self.retry_backoff_s * (2 ** (attempts - 1)),
-                               5.0))
+        res: Optional[PointResult] = None
+        try:
+            while True:
+                attempts += 1
+                res = self._evaluate_attempt(point)
+                res.attempts = attempts
+                if res.ok or attempts > self.point_retries:
+                    break
+                if self.retry_backoff_s > 0.0:
+                    time.sleep(min(
+                        self.retry_backoff_s * (2 ** (attempts - 1)),
+                        5.0))
+        finally:
+            # res is None only when a SimulatedCrash (BaseException)
+            # escaped _evaluate_attempt -- tally it as a failure
+            status = res.status if res is not None else "failed"
+            reg = metrics()
+            reg.counter("dse.point/" + status).inc()
+            reg.counter("dse.point_attempts").inc(attempts)
+            if sp is not None:
+                sp.set("status", status)
+                sp.set("attempts", attempts)
+                if res is not None and res.error:
+                    sp.set("error", res.error)
+                sp.__exit__(None, None, None)
+        return res
 
     def _evaluate_attempt(self, point: DesignPoint) -> PointResult:
         if self.point_timeout_s is None:
@@ -197,8 +227,12 @@ class SweepEngine:
             params = point.default_params()
             sig = mapping_signature(spec, params)
             plans = self._plan_cache.get(sig)
+            from repro.obs.metrics import metrics
             if plans is not None:
                 self.plan_cache_hits += 1
+                metrics().counter("dse.plan_cache/hit").inc()
+            else:
+                metrics().counter("dse.plan_cache/miss").inc()
             token = f"{self._workload_token}|{hash(sig):x}"
             sim = CascadeSimulator(spec, params=params,
                                    backend=self._backend_for(token),

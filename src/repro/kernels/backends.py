@@ -37,7 +37,7 @@ import functools
 import os
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -533,7 +533,13 @@ class DowngradeEvent:
                       pallas-tpu on a CPU host).
 
     Every caught seam fault produces at least one event -- the guard
-    never swallows silently."""
+    never swallows silently.
+
+    ``ts_us`` is a monotonic microsecond timestamp and ``einsum`` the
+    Einsum active on the owning executor, both stamped at record time
+    (``GuardedKernels._record``) so exported traces order events
+    deterministically even though the executor drains them per-Einsum
+    batch."""
     seam: str
     backend: str
     fallback: str            # next backend tried ("" for retry/demote)
@@ -541,12 +547,15 @@ class DowngradeEvent:
     reason: str
     exc_type: str
     attempts: int = 1
+    ts_us: float = 0.0       # monotonic; stamped by _record
+    einsum: str = ""         # active Einsum at record time
 
     def as_dict(self) -> Dict[str, object]:
         return {"seam": self.seam, "backend": self.backend,
                 "fallback": self.fallback, "action": self.action,
                 "reason": self.reason, "exc_type": self.exc_type,
-                "attempts": self.attempts}
+                "attempts": self.attempts, "ts_us": self.ts_us,
+                "einsum": self.einsum}
 
 
 class KernelChainExhausted(RuntimeError):
@@ -620,6 +629,29 @@ def _guards_enabled() -> bool:
         from repro.core import guards
         _GUARDS_ENABLED_FN = guards.enabled
     return _GUARDS_ENABLED_FN()
+
+
+_TRACER_FN = None
+_METRICS_FN = None
+
+
+def _obs_tracer():
+    # same cached-hook pattern as the fault injector: one global read
+    # plus a call per guarded seam call; returns None when telemetry
+    # is disabled, and the caller takes the pre-telemetry path
+    global _TRACER_FN
+    if _TRACER_FN is None:
+        from repro.obs.spans import active_tracer
+        _TRACER_FN = active_tracer
+    return _TRACER_FN()
+
+
+def _obs_metrics():
+    global _METRICS_FN
+    if _METRICS_FN is None:
+        from repro.obs.metrics import metrics
+        _METRICS_FN = metrics
+    return _METRICS_FN()
 
 
 def _postcheck(seam: str, args, kwargs, out) -> None:
@@ -736,6 +768,10 @@ class GuardedKernels:
         self._unavailable: Dict[str, str] = {}
         self._events: List[DowngradeEvent] = []
         self._lock = threading.Lock()
+        #: the Einsum currently executing on the owning backend; set by
+        #: ``VectorBackend`` around ``_run`` so DowngradeEvents and seam
+        #: spans carry their Einsum attribution
+        self.current_einsum = ""
         # hot-path precomputation: (entry, name) pairs so _call does
         # not re-derive names per seam call, and a per-wrapper instance
         # cache so resolved entries skip the registry dict walk
@@ -760,10 +796,20 @@ class GuardedKernels:
 
     def _record(self, ev: DowngradeEvent) -> None:
         global _EVENTS_RECORDED
+        if ev.ts_us == 0.0:
+            ev = replace(ev, ts_us=time.perf_counter() * 1e6,
+                         einsum=ev.einsum or self.current_einsum)
         with self._lock:
             self._events.append(ev)
         with _GUARD_LOCK:
             _EVENTS_RECORDED += 1
+        # rare-event telemetry: counters always, trace instant only
+        # when a tracer is installed
+        _obs_metrics().counter("kernel.downgrade/" + ev.action).inc()
+        tr = _obs_tracer()
+        if tr is not None:
+            tr.instant("downgrade:" + ev.action, cat="downgrade",
+                       args=ev.as_dict())
 
     # -------------------------------------------------------------- #
     def _instantiate(self, entry, seam: str):
@@ -801,6 +847,17 @@ class GuardedKernels:
 
     # -------------------------------------------------------------- #
     def _call(self, seam: str, *args, **kwargs):
+        tr = _obs_tracer()
+        if tr is None:
+            # disabled path: identical to the pre-telemetry dispatch,
+            # no span / histogram objects touched
+            return self._dispatch(seam, args, kwargs, None)
+        with tr.span("seam:" + seam, cat="seam",
+                     args={"einsum": self.current_einsum}
+                     if self.current_einsum else None) as sp:
+            return self._dispatch(seam, args, kwargs, sp)
+
+    def _dispatch(self, seam: str, args, kwargs, span):
         inj = _active_injector()
         check = _guards_enabled()
         last_exc: Optional[BaseException] = None
@@ -822,7 +879,16 @@ class GuardedKernels:
                 try:
                     if inj is not None:
                         inj.before_seam(seam, bname)
+                    if span is not None:
+                        t0 = time.perf_counter()
                     out = getattr(backend, seam)(*args, **kwargs)
+                    if span is not None:
+                        _obs_metrics().histogram(
+                            f"kernel.seam_seconds/{seam}/{bname}"
+                        ).observe(time.perf_counter() - t0)
+                        span.set("backend", bname)
+                        if attempts > 1:
+                            span.set("attempts", attempts)
                     if inj is not None:
                         out = inj.after_seam(seam, bname, out)
                     if check:
