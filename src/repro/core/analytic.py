@@ -148,7 +148,7 @@ class AnalyticBackend(ExecutorBackend):
             if t not in plan.tensors:
                 return True
             ft = tensors.get(t)
-            if ft is not None and ft.nnz == 0 and t in self._predicted:
+            if ft is not None and ft.is_empty and t in self._predicted:
                 continue                    # unmaterialized intermediate
             key = (self.cache_token, t, tuple(plan.tensors[t].exec_order))
             if key not in self._calib:

@@ -25,10 +25,13 @@ instances (real load imbalance, not an average).
 from __future__ import annotations
 
 import math
+import threading
 from collections import Counter, OrderedDict, defaultdict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+from .density import stat_misses
 from .fibertree import Fiber, FTensor
 from .formats import fiber_header_bytes, subtree_bytes, touch_bytes
 from .mapping import EinsumPlan
@@ -37,6 +40,31 @@ from .spec import (AcceleratorSpec, Component, EinsumBinding, RankFormat,
 from .trace import Instrumentation
 
 SpatialKey = Tuple
+
+# ---------------------------------------------------------------------- #
+# point-axis vectorized statistical residency (DSE batched replay)
+# ---------------------------------------------------------------------- #
+#: thread-local feed of pre-vectorized ``stat_misses`` values.  The DSE
+#: engine computes the capacity-dependent miss closed form for a whole
+#: group of design points in one numpy pass (``density.
+#: batched_stat_misses`` over the point axis) and replays the recorded
+#: event stream per point under ``stat_miss_feed`` -- each touch_stat
+#: then consumes its precomputed value instead of recomputing it.  A
+#: feed entry that does not match the live call (routing drift) makes
+#: the feed stand down and the scalar closed form take over, so feeding
+#: is an optimization that can never change results.
+_STAT_FEED = threading.local()
+
+
+@contextmanager
+def stat_miss_feed(feed):
+    prev = getattr(_STAT_FEED, "feed", None)
+    _STAT_FEED.feed = feed
+    try:
+        yield
+    finally:
+        _STAT_FEED.feed = prev
+
 
 
 # ---------------------------------------------------------------------- #
@@ -147,11 +175,12 @@ class StorageLevel:
         if unique == 0 or nbytes <= 0:
             return
         footprint = unique * nbytes
-        misses = float(unique)                       # compulsory
-        if footprint > self.capacity_bytes and n > unique:
-            # streaming reuse beyond capacity: each reuse access misses
-            # with the fraction of the working set not resident
-            misses += (n - unique) * (1.0 - self.capacity_bytes / footprint)
+        misses = None
+        feed = getattr(_STAT_FEED, "feed", None)
+        if feed is not None:
+            misses = feed.take(self, nbytes, n, unique)
+        if misses is None:
+            misses = stat_misses(n, unique, nbytes, self.capacity_bytes)
         self.fills += int(round(misses))
         self.fill_bytes += misses * nbytes
         if rw == "r":

@@ -104,6 +104,44 @@ def affine_hit_fraction(terms: Sequence[Tuple[str, int]], const: float,
     return max(0.0, min(overlap / width, 1.0))
 
 
+def stat_misses(n: float, unique: float, nbytes: float,
+                capacity_bytes: float) -> float:
+    """Expected misses of an aggregate touch under the Sparseloop-style
+    statistical residency model: ``unique`` compulsory misses, plus --
+    when the touched footprint exceeds capacity -- capacity misses on
+    the reuse accesses proportional to the non-resident fraction of the
+    working set.  The single scalar closed form shared by
+    ``components.StorageLevel.touch_stat`` and its point-axis
+    vectorization below (both must stay bit-identical)."""
+    footprint = unique * nbytes
+    misses = float(unique)
+    if footprint > capacity_bytes and n > unique:
+        misses += (n - unique) * (1.0 - capacity_bytes / footprint)
+    return misses
+
+
+def batched_stat_misses(n: float, unique: float, nbytes, capacity_bytes):
+    """``stat_misses`` broadcast across a *point axis*: ``nbytes`` and
+    ``capacity_bytes`` are arrays with one entry per design point (the
+    swept scalar params -- e.g. a FiberCache capacity axis), evaluated
+    in one numpy pass instead of a Python loop per point.
+
+    Bit-identity contract: every arithmetic op mirrors the scalar
+    closed form exactly (same +,-,*,/ on float64; no transcendentals),
+    so ``batched_stat_misses(n, u, b, caps)[i] == stat_misses(n, u,
+    b[i], caps[i])`` bitwise -- asserted by a parity test."""
+    import numpy as np
+    nbytes = np.asarray(nbytes, dtype=np.float64)
+    caps = np.asarray(capacity_bytes, dtype=np.float64)
+    footprint = unique * nbytes
+    base = np.full(np.broadcast(footprint, caps).shape, float(unique))
+    if n <= unique:
+        return base
+    with np.errstate(divide="ignore", invalid="ignore"):
+        reuse = (n - unique) * (1.0 - caps / footprint)
+    return np.where(footprint > caps, base + reuse, base)
+
+
 def _log_nonempty_prob(inner: float, nnz: float, total: float) -> float:
     """log P(a block of ``inner`` positions holds >= 1 of ``nnz``
     nonzeros placed without replacement among ``total`` positions):

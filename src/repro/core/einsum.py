@@ -222,11 +222,26 @@ class _Tokens:
 
 
 def parse_einsum(text: str) -> Einsum:
-    """Parse one statement ``LHS = RHS``."""
-    lhs_text, rhs_text = text.split("=", 1)
-    output = _parse_access(lhs_text.strip())
-    expr = _parse_expr(_Tokens(rhs_text.strip()))
-    return Einsum(output=output, expr=expr, text=text.strip())
+    """Parse one statement ``LHS = RHS``.
+
+    Memoized: parsing is a pure function of ``text`` and every AST
+    node is a frozen dataclass, so specs built from the same
+    expression share one parse.  Design-space sweeps rebuild specs
+    per point and this dominates spec-construction cost otherwise.
+    """
+    cached = _PARSE_CACHE.get(text)
+    if cached is None:
+        lhs_text, rhs_text = text.split("=", 1)
+        output = _parse_access(lhs_text.strip())
+        expr = _parse_expr(_Tokens(rhs_text.strip()))
+        cached = Einsum(output=output, expr=expr, text=text.strip())
+        if len(_PARSE_CACHE) >= 4096:
+            _PARSE_CACHE.clear()
+        _PARSE_CACHE[text] = cached
+    return cached
+
+
+_PARSE_CACHE: Dict[str, Einsum] = {}
 
 
 def _parse_access(text: str) -> TensorAccess:

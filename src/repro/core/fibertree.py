@@ -210,6 +210,12 @@ class FTensor:
     def nnz(self) -> int:
         return sum(1 for _ in self.iter_leaves())
 
+    @property
+    def is_empty(self) -> bool:
+        """True when the tensor holds no leaves.  O(depth), unlike
+        ``nnz == 0`` which walks every leaf before comparing."""
+        return next(self.iter_leaves(), None) is None
+
     def iter_leaves(self) -> Iterator[Tuple[Tuple[Coord, ...], Any]]:
         def rec(fiber: Fiber, path: Tuple[Coord, ...]):
             for c, p in fiber:

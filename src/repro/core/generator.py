@@ -131,6 +131,31 @@ def merge_events(stored: FTensor, exec_var_order: Sequence[str]
     return events
 
 
+def isect_configs(spec: AcceleratorSpec) -> Tuple[Tuple[str, str, Any], ...]:
+    """Per-einsum intersection config (strategy, leader) read from each
+    Einsum's bound topology.  These arch attributes shape the *event
+    stream itself* (unlike capacities/bandwidths, which only shape its
+    consumption), so the DSE engine folds them into its batched-replay
+    group key alongside ``mapping_signature`` -- two points may only
+    share a recorded stream when both agree."""
+    out = []
+    for e in spec.einsum.expressions:
+        name = e.output.tensor
+        topo_name = spec.binding.get(name).topology
+        topo = spec.arch.topologies.get(topo_name)
+        if topo is None and spec.arch.topologies:
+            topo = next(iter(spec.arch.topologies.values()))
+        strategy, leader = "two_finger", None
+        if topo is not None:
+            for comp, _ in topo.all_components():
+                if comp.klass == "Intersection":
+                    strategy = comp.attrs.get("type", "two_finger")
+                    leader = comp.attrs.get("leader")
+                    break
+        out.append((name, strategy, leader))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------- #
 # the cascade simulator
 # ---------------------------------------------------------------------- #
@@ -216,15 +241,9 @@ class CascadeSimulator:
     def _isect_config(self, out_name: str):
         """Intersection strategy for this Einsum from its bound topology's
         Intersection component (type, leader attrs)."""
-        topo_name = self.spec.binding.get(out_name).topology
-        topo = self.spec.arch.topologies.get(topo_name)
-        if topo is None and self.spec.arch.topologies:
-            topo = next(iter(self.spec.arch.topologies.values()))
-        if topo is not None:
-            for comp, _ in topo.all_components():
-                if comp.klass == "Intersection":
-                    return (comp.attrs.get("type", "two_finger"),
-                            comp.attrs.get("leader"))
+        for name, strategy, leader in isect_configs(self.spec):
+            if name == out_name:
+                return (strategy, leader)
         return ("two_finger", None)
 
     # ------------------------------------------------------------------ #

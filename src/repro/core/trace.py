@@ -94,6 +94,71 @@ class CollectingInstr(Instrumentation):
         self.merges.append((einsum, tensor, elements, lists))
 
 
+class RecordingInstr(Instrumentation):
+    """Records the event stream verbatim for later replay.
+
+    The basis of the DSE engine's batched evaluation: for design points
+    that share a mapping signature (and intersection config), the
+    backend's instrumentation stream is a pure function of the workload
+    and the lowered plans -- architecture attributes (capacities,
+    bandwidths, radices) enter only when the stream is *consumed* by a
+    ``PerformanceModel``.  Recording the stream once and replaying it
+    into each point's own model therefore reproduces per-point results
+    bit-identically while paying the backend walk once per group.
+
+    ``max_events`` bounds memory: past it the recorder stops appending
+    and flags ``overflowed`` -- callers must then fall back to
+    per-point evaluation (per-element streams from the Python oracle
+    can be arbitrarily long; aggregate analytic streams are tiny).
+    """
+
+    def __init__(self, max_events: int = 250_000):
+        self.max_events = max_events
+        self.events: List[Tuple] = []
+        self.overflowed = False
+
+    def _rec(self, method: str, *args) -> None:
+        if len(self.events) >= self.max_events:
+            self.overflowed = True
+            return
+        self.events.append((method, args))
+
+    def begin_einsum(self, einsum):
+        self._rec("begin_einsum", einsum)
+
+    def end_einsum(self, einsum):
+        self._rec("end_einsum", einsum)
+
+    def touch(self, einsum, tensor, rank, path, kind, rw, n=1, unique=None):
+        self._rec("touch", einsum, tensor, rank, path, kind, rw, n, unique)
+
+    def advance(self, einsum, rank, n=1):
+        self._rec("advance", einsum, rank, n)
+
+    def iterate(self, einsum, rank, n=1, coord=None):
+        self._rec("iterate", einsum, rank, n, coord)
+
+    def compute(self, einsum, op, n=1):
+        self._rec("compute", einsum, op, n)
+
+    def isect_step(self, einsum, rank, tensor, n=1):
+        self._rec("isect_step", einsum, rank, tensor, n)
+
+    def isect_match(self, einsum, rank, n=1):
+        self._rec("isect_match", einsum, rank, n)
+
+    def merge(self, einsum, tensor, elements, lists):
+        self._rec("merge", einsum, tensor, elements, lists)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def replay(self, sink: Instrumentation) -> None:
+        """Re-emit the recorded stream, in order, into ``sink``."""
+        for method, args in self.events:
+            getattr(sink, method)(*args)
+
+
 class TeeInstr(Instrumentation):
     """Fan out events to several sinks."""
 

@@ -34,11 +34,18 @@ def pareto_front(results: Sequence[Any],
                  objectives: Sequence[Objective] = DEFAULT_OBJECTIVES
                  ) -> List[Any]:
     """Non-dominated subset of ``results``, in input order.  Duplicate
-    objective vectors keep their first representative."""
-    vals = [_values(r, objectives) for r in results]
+    objective vectors keep their first representative.
+
+    Results that report a falsy ``ok`` attribute (failed / timed-out
+    ``PointResult``s, whose objectives are NaN placeholders) are
+    filtered out before frontier construction -- a failed point can
+    never appear on the front.  Objects without an ``ok`` attribute
+    (plain ``Report``s, ad-hoc records) are kept."""
+    alive = [r for r in results if getattr(r, "ok", True)]
+    vals = [_values(r, objectives) for r in alive]
     front: List[Any] = []
     seen = set()
-    for i, (r, v) in enumerate(zip(results, vals)):
+    for i, (r, v) in enumerate(zip(alive, vals)):
         if v in seen:
             continue
         if any(dominates(w, v) for j, w in enumerate(vals) if j != i):

@@ -113,8 +113,19 @@ class DesignSpace:
         return out
 
     def random(self, n: int, seed: int = 0) -> List[DesignPoint]:
-        """Random subsample of the grid (without replacement when the
-        space is small enough, i.i.d. axis draws otherwise)."""
+        """Random subsample of the grid: ``n`` distinct points,
+        deterministic in ``seed``.
+
+        The draw depends only on (axes, seed): ``random.Random`` is
+        stable across processes and platforms (unlike ``hash``-seeded
+        orderings), so sharded sweep workers and cache keys agree on
+        the same points.  ``n`` is clamped to the space size;
+        duplicates are rejected, so the result is always
+        collision-free (every label unique) and a subset of
+        ``grid()``."""
+        n = min(n, self.size)
+        if n <= 0:
+            return []
         rng = random.Random(seed)
         if self.size <= max(n * 4, 64):
             pts = self.grid()
@@ -122,7 +133,13 @@ class DesignSpace:
             return pts[:n]
         out: List[DesignPoint] = []
         seen = set()
-        while len(out) < n:
+        # n <= size/4 here, so each i.i.d. draw collides with
+        # probability < 1/4 and the bounded loop cannot realistically
+        # exhaust; the cap turns a logic error into a loud failure
+        # instead of a hang
+        budget = 64 * n + 256
+        while len(out) < n and budget > 0:
+            budget -= 1
             kw = {k: rng.choice(list(v)) for k, v in self.axes.items()}
             params = {k: rng.choice(list(v))
                       for k, v in self.param_axes.items()}
@@ -131,6 +148,11 @@ class DesignSpace:
                 continue
             seen.add(pt)
             out.append(pt)
+        if len(out) < n:
+            raise RuntimeError(
+                f"DesignSpace.random drew {len(out)}/{n} distinct "
+                f"points from a size-{self.size} space before "
+                f"exhausting its draw budget")
         return out
 
     def overrides(self, per_point: Iterable[Mapping[str, Any]]

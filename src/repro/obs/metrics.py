@@ -11,6 +11,12 @@ prefix, ``/``-separated label suffix --
     dse.point/<status>                       counter   (ok/restored/...)
     dse.point_attempts                       counter
     dse.plan_cache/{hit,miss}                counter
+    dse.result_cache/{hit,miss}              counter   (served without
+                                                        the backend)
+    dse.service/{requests,batches,           counter   (sweep-service
+                 coalesced,rejected}                    front-end)
+    dse.service/batch_size                   histogram (requests per
+                                                        micro-batch)
 
 Counters accept float increments (stage seconds accumulate into a
 counter rather than a histogram: the per-stage distribution is already
